@@ -1,0 +1,123 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=32")
+
+"""Paper Fig.4 + Fig.5: search efficiency of random / BO / Collie(SA), and
+the diagnostic-counter + MFS ablations — at bench scale (4x4 / 2x4x4 meshes,
+reduced dims; see core/benchscale.py).
+
+Phase 1 establishes ground truth: a long Collie campaign whose MFS catalog
+defines the anomaly set.  Phase 2 runs each algorithm variant with a fixed
+compile budget and fresh engine; an anomaly counts as found when the run
+measures a point inside its ground-truth MFS with the anomaly firing —
+exactly the paper's crediting.
+"""
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import anomaly
+from repro.core.benchscale import BENCH_SHAPES, bench_archs, bench_meshes
+from repro.core.bo import bo_search
+from repro.core.catalog import render_markdown, save_catalog
+from repro.core.engine import Engine
+from repro.core.random_search import random_search
+from repro.core.sa import campaign, rank_counters, simulated_annealing
+from repro.core.searchspace import SearchSpace
+
+from common import credit_events, save_json, summarize_credits  # noqa: E402
+
+ARCH_SUBSET = os.environ.get("ARCHS", "qwen2-1.5b,mixtral-8x7b,rwkv6-7b,recurrentgemma-2b").split(",")
+GT_BUDGET = int(os.environ.get("GT_BUDGET", 200))
+RUN_BUDGET = int(os.environ.get("RUN_BUDGET", 70))
+SEEDS = (0,) if os.environ.get("RUN_BUDGET") else (0, 1)
+
+DIAG = [("diag.collective_blowup", "max"), ("diag.memory_overshoot", "max"),
+        ("diag.transpose_bytes", "max")]
+PERF = [("perf.roofline_efficiency", "min"),
+        ("perf.useful_flops_ratio", "min")]
+
+
+def fresh(space):
+    return Engine(space, bench_meshes())
+
+
+def main():
+    t0 = time.time()
+    space = SearchSpace(bench_archs(ARCH_SUBSET), BENCH_SHAPES,
+                    restrict={"grad_compress": ("none",),
+                              "scan_layers": (True,)})
+    # int8/bf16 compression points CHECK-crash this XLA build's
+    # partitioner (see EXPERIMENTS.md) — excluded as untestable
+    print(f"# search space size: {space.size():.3g}", flush=True)
+
+    # ---- counter ranking (paper §7.2: sigma/mu over 10 probes)
+    eng = fresh(space)
+    ranked = rank_counters(eng, space,
+                           [c for c, _ in DIAG] + [c for c, _ in PERF],
+                           seed=123)
+    print(f"# counter ranking: {ranked}", flush=True)
+    diag_ranked = [(c, "max") for c in ranked if c.startswith("diag.")]
+    perf_ranked = [(c, "min") for c in ranked if c.startswith("perf.")]
+
+    # ---- phase 1: ground truth
+    gt_engine = fresh(space)
+    gt = campaign(gt_engine, space, diag_ranked + perf_ranked, seed=7,
+                  budget_compiles=GT_BUDGET, label="ground-truth")
+    save_catalog(gt.anomalies, os.path.join(os.path.dirname(__file__),
+                                            "results", "bench_gt_catalog.json"),
+                 {"budget": GT_BUDGET, "space": space.size()})
+    print(f"# ground truth: {len(gt.anomalies)} anomalies "
+          f"({gt.n_compiles} compiles, {gt.wall_s:.0f}s)", flush=True)
+    print(render_markdown(gt.anomalies, "Ground-truth anomalies (bench scale)"),
+          flush=True)
+
+    variants = {
+        "random": lambda e, s: random_search(e, space, seed=s,
+                                             budget_compiles=RUN_BUDGET),
+        "bo-diag": lambda e, s: bo_search(e, space, diag_ranked[0][0], "max",
+                                          seed=s, budget_compiles=RUN_BUDGET),
+        "collie-diag": lambda e, s: campaign(e, space, diag_ranked, seed=s,
+                                             budget_compiles=RUN_BUDGET,
+                                             label="collie-diag"),
+        "collie-perf": lambda e, s: campaign(e, space, perf_ranked, seed=s,
+                                             budget_compiles=RUN_BUDGET,
+                                             label="collie-perf"),
+        "sa-diag-nomfs": lambda e, s: campaign(e, space, diag_ranked, seed=s,
+                                               budget_compiles=RUN_BUDGET,
+                                               mfs_skip=False,
+                                               mfs_construct=False,
+                                               label="sa-diag-nomfs"),
+        "sa-perf-nomfs": lambda e, s: campaign(e, space, perf_ranked, seed=s,
+                                               budget_compiles=RUN_BUDGET,
+                                               mfs_skip=False,
+                                               mfs_construct=False,
+                                               label="sa-perf-nomfs"),
+    }
+    summary = {}
+    for name, fn in variants.items():
+        credits = []
+        for seed in SEEDS:
+            e = fresh(space)
+            r = fn(e, seed)
+            credits.append(credit_events(r.events, gt.anomalies))
+        s = summarize_credits(credits, len(gt.anomalies))
+        summary[name] = s
+        means = [v["mean_compiles"] for v in s["per_gt"].values()
+                 if v["mean_compiles"] is not None]
+        mean_str = f"{sum(means)/len(means):.1f}" if means else "-"
+        print(f"bench_search,{name},found={s['n_found']}/{s['n_gt']},"
+              f"mean_compiles_to_find={mean_str}", flush=True)
+
+    save_json("bench_search.json", {
+        "ground_truth_n": len(gt.anomalies),
+        "budget": RUN_BUDGET, "seeds": list(SEEDS),
+        "ranking": ranked,
+        "summary": summary,
+        "wall_s": time.time() - t0,
+    })
+    print(f"# total {time.time()-t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

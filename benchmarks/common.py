@@ -1,0 +1,46 @@
+"""Shared benchmark plumbing: ground-truth crediting + result IO."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def save_json(name: str, data):
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, name), "w") as f:
+        json.dump(data, f, indent=1, default=str)
+
+
+def load_json(name: str):
+    with open(os.path.join(RESULTS, name)) as f:
+        return json.load(f)
+
+
+def credit_events(events, ground_truth) -> dict:
+    """Paper Fig.4 metric: for each ground-truth anomaly, the compile count
+    at which this run first measured a point inside its MFS with the anomaly
+    firing.  Returns {gt_index: n_compiles or None}."""
+    out = {}
+    for i, gt in enumerate(ground_truth):
+        found = None
+        for e in events:
+            if gt.kind in e.kinds and gt.matches(e.point):
+                found = e.n_compiles
+                break
+        out[i] = found
+    return out
+
+
+def summarize_credits(credits_by_run, n_gt) -> dict:
+    """credits_by_run: list of {gt: n or None}. Returns per-gt mean/found."""
+    per_gt = {}
+    for i in range(n_gt):
+        hits = [c[i] for c in credits_by_run if c[i] is not None]
+        per_gt[i] = {"found_in_runs": len(hits),
+                     "runs": len(credits_by_run),
+                     "mean_compiles": (sum(hits) / len(hits)) if hits else None}
+    found_any = sum(1 for i in range(n_gt)
+                    if per_gt[i]["found_in_runs"] > 0)
+    return {"per_gt": per_gt, "n_found": found_any, "n_gt": n_gt}

@@ -1,0 +1,80 @@
+"""Benchmark orchestrator — one entry per paper table/figure (+ roofline).
+
+Each benchmark runs in its own subprocess because it needs its own virtual
+device count (32 for bench-scale search, 512 for production-mesh analyses).
+Prints one CSV summary line per benchmark: name,status,wall_s,paper_analogue
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run --only bench_search
+  FAST=1 PYTHONPATH=src python -m benchmarks.run     # reduced budgets
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+BENCHES = [
+    # (script, paper analogue, env, devices)
+    ("bench_roofline.py", "roofline table (deliverable g)", {}, 512),
+    ("bench_search.py", "Fig.4 search efficiency + Fig.5 ablations", {}, 32),
+    ("bench_counter_trace.py", "Fig.6 counter trace", {}, 32),
+    ("bench_anomaly_table.py", "Table 2 production catalog", {}, 512),
+    ("bench_perf_iter.py", "Perf hillclimb validation", {}, 512),
+]
+
+FAST_ENV = {
+    "bench_search.py": {"GT_BUDGET": "70", "RUN_BUDGET": "25"},
+    "bench_counter_trace.py": {"TRACE_BUDGET": "22"},
+    "bench_anomaly_table.py": {"CATALOG_BUDGET": "45"},
+}
+
+
+def run_bench(script: str, extra_env: dict, devices: int,
+              timeout: int = 10800) -> tuple[int, float]:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "src")
+    env.update(extra_env)
+    if os.environ.get("FAST"):
+        env.update(FAST_ENV.get(script, {}))
+    t0 = time.time()
+    p = subprocess.run([sys.executable, os.path.join(HERE, script)],
+                       env=env, cwd=HERE, capture_output=True, text=True,
+                       timeout=timeout)
+    wall = time.time() - t0
+    sys.stdout.write(p.stdout)
+    if p.returncode != 0:
+        sys.stderr.write(p.stderr[-4000:])
+    return p.returncode, wall
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = 0
+    summary = []
+    for script, analogue, env, devices in BENCHES:
+        if args.only and args.only not in script:
+            continue
+        try:
+            rc, wall = run_bench(script, env, devices)
+        except subprocess.TimeoutExpired:
+            rc, wall = -1, float("nan")
+        status = "ok" if rc == 0 else "FAIL"
+        failures += rc != 0
+        summary.append(f"{script},{status},{wall:.0f},{analogue}")
+    print("name,status,wall_s,paper_analogue")
+    for line in summary:
+        print(line, flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Atomic, versioned, async checkpointing with integrity checks + resume.
+
+Layout:  <dir>/step_<N>/{arrays.npz, meta.json}   (+ <dir>/step_<N>.tmp while
+writing; the atomic directory rename publishes the checkpoint).  Each array
+records a CRC in meta.json; restore skips corrupt/partial checkpoints and
+falls back to the newest valid one — this is the crash-consistency half of
+fault tolerance (the elastic runtime in ``repro/runtime/elastic.py`` is the
+membership half).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten(tree[k], prefix + (str(k),))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _flatten(v, prefix + (str(i),))
+    else:
+        yield "/".join(prefix), tree
+
+
+def _unflatten_into(template, flat):
+    def walk(t, prefix):
+        if isinstance(t, dict):
+            return {k: walk(v, prefix + (str(k),)) for k, v in t.items()}
+        if isinstance(t, (list, tuple)):
+            return type(t)(walk(v, prefix + (str(i),)) for i, v in enumerate(t))
+        return flat["/".join(prefix)]
+    return walk(template, ())
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_last: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep_last = keep_last
+        self.async_write = async_write
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree, extra_meta: dict | None = None):
+        host = {k: np.asarray(v) for k, v in _flatten(tree)}
+        self.wait()
+        if self.async_write:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, extra_meta or {}))
+            self._thread.start()
+        else:
+            self._write(step, host, extra_meta or {})
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host: dict, extra_meta: dict):
+        tmp = os.path.join(self.dir, f"step_{step}.tmp")
+        final = os.path.join(self.dir, f"step_{step}")
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        crcs = {}
+        for k, v in host.items():
+            crcs[k] = zlib.crc32(np.ascontiguousarray(v).tobytes())
+        np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        meta = {"step": step, "crcs": crcs, **extra_meta}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)          # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = self.list_steps()
+        for s in steps[:-self.keep_last]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def list_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name.split("_", 1)[1]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def _valid(self, step: int) -> dict | None:
+        path = os.path.join(self.dir, f"step_{step}")
+        try:
+            with open(os.path.join(path, "meta.json")) as f:
+                meta = json.load(f)
+            data = np.load(os.path.join(path, "arrays.npz"))
+            flat = {}
+            for k, crc in meta["crcs"].items():
+                v = data[k]
+                if zlib.crc32(np.ascontiguousarray(v).tobytes()) != crc:
+                    return None
+                flat[k] = v
+            return {"meta": meta, "flat": flat}
+        except Exception:
+            return None
+
+    def restore_latest(self, template, shardings=None):
+        """Restore newest valid checkpoint into ``template`` structure.
+
+        Returns (step, tree) or (None, None).  ``shardings``: optional pytree
+        of NamedShardings for device placement.
+        """
+        for step in reversed(self.list_steps()):
+            got = self._valid(step)
+            if got is None:
+                continue
+            tree = _unflatten_into(template, got["flat"])
+            if shardings is not None:
+                tree = jax.tree.map(
+                    lambda a, s: jax.device_put(a, s), tree, shardings)
+            return got["meta"], tree
+        return None, None

@@ -1,0 +1,119 @@
+"""The measurement layer: compile a workload cell, harvest counters.
+
+Mirrors the paper's two counter classes:
+* performance counters — roofline-efficiency / useful-FLOP fraction (driven
+  to LOW-value regions by the search);
+* diagnostic counters — collective-traffic blowup, layout-thrash bytes, remat
+  duplication, memory overshoot, sharding fallbacks (driven HIGH).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+from .. import hw
+from ..launch import hloanalysis
+from . import analytic
+
+
+@dataclasses.dataclass
+class Measurement:
+    cell: Any
+    compile_s: float
+    memory: dict
+    cost_analysis: dict
+    hlo: dict
+    roofline: dict
+    floors: dict
+    perf: dict          # performance counters (lower = worse)
+    diag: dict          # diagnostic counters (higher = more stressed)
+
+    def summary(self) -> dict:
+        return {
+            "arch": self.cell.cfg.name, "shape": self.cell.shape.name,
+            "mesh": dict(self.cell.mesh.shape), "compile_s": self.compile_s,
+            "memory": self.memory, "roofline": self.roofline,
+            "floors": {k: v for k, v in self.floors.items()},
+            "perf": self.perf, "diag": self.diag,
+            "hlo": {k: v for k, v in self.hlo.items() if k != "op_hist"},
+            "policy": dataclasses.asdict(self.cell.policy),
+        }
+
+
+def measure_cell(cell, chip: hw.ChipSpec = hw.V5E) -> Measurement:
+    t0 = time.time()
+    lowered = cell.lower()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    memory = {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "peak_bytes": (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                       + ma.output_size_in_bytes - ma.alias_size_in_bytes),
+    }
+    try:
+        ca = dict(compiled.cost_analysis())
+        ca = {k: ca[k] for k in ("flops", "bytes accessed") if k in ca}
+    except Exception:
+        ca = {}
+    hlo = hloanalysis.analyze(compiled.as_text())
+
+    n = cell.mesh.size
+    # per-device quantities straight from the partitioned module
+    flops_dev = hlo["flops"]
+    bytes_dev = hlo["bytes_hbm"]
+    wire_dev = hlo["collective_wire_total"]
+    compute_s = flops_dev / chip.peak_flops_bf16
+    memory_s = bytes_dev / chip.hbm_bw
+    coll_s = wire_dev / chip.ici_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dom = max(terms, key=terms.get)
+    bound_s = terms[dom]
+
+    floors = analytic.step_floor_seconds(cell.cfg, cell.shape, cell.policy,
+                                         cell.mesh, chip)
+    mf = floors["assignment_model_flops"]
+    # scale-stable numerator: matmul params + attention + recurrence terms
+    mf_useful = (floors["matmul_model_flops"]
+                 + analytic.attention_flops(cell.cfg, cell.shape)
+                 + analytic.recurrence_flops(cell.cfg, cell.shape))
+    total_hlo_flops = flops_dev * n
+    roofline = {
+        **terms, "dominant": dom, "bound_s": bound_s,
+        "hlo_flops_per_dev": flops_dev, "hlo_bytes_per_dev": bytes_dev,
+        "collective_wire_per_dev": wire_dev,
+        "collective_bytes_per_dev": hlo["collective_bytes_total"],
+        "model_flops": mf,
+        "model_flops_ratio": mf / max(total_hlo_flops, 1.0),
+        "useful_flops_ratio": mf_useful / max(total_hlo_flops, 1.0),
+        "roofline_fraction": floors["compute_s"] / max(bound_s, 1e-30),
+    }
+
+    perf = {
+        # fraction of ideal step time actually achievable (<=1; low = anomaly)
+        "roofline_efficiency": min(floors["floor_s"] / max(bound_s, 1e-30), 1.0),
+        "useful_flops_ratio": roofline["useful_flops_ratio"],
+    }
+    peak = memory["peak_bytes"]
+    diag = {
+        "collective_blowup": wire_dev / max(floors["collective_floor"], 16e6),
+        "collective_wire_bytes": wire_dev,
+        "transpose_bytes": hlo["transpose_bytes"],
+        "remat_flops_frac": hlo["remat_flops"] / max(flops_dev, 1.0),
+        "memory_overshoot": peak / max(floors["memory_floor"], 1.0),
+        "peak_bytes": peak,
+        "hbm_oversubscribed": peak / chip.hbm_bytes,
+        "shard_fallbacks": cell.stats.fallbacks,
+        "n_allgather": hlo["collective_count"].get("all-gather", 0),
+        "n_allreduce": hlo["collective_count"].get("all-reduce", 0),
+        "n_alltoall": hlo["collective_count"].get("all-to-all", 0),
+        "n_permute": hlo["collective_count"].get("collective-permute", 0),
+    }
+    return Measurement(cell, compile_s, memory, ca, hlo, roofline, floors,
+                       perf, diag)

@@ -1,0 +1,63 @@
+"""The workload engine (paper §4 "Workload engine" + §6).
+
+Translates a search-space point into a concrete compiled workload on the
+production mesh and returns its counters.  Compilation failures / invalid
+settings are reported as None (the search skips them), mirroring the paper's
+engine rejecting unsatisfiable verb combinations.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any
+
+from ..train.optimizer import OptConfig
+from ..launch.steps import build_cell
+from . import counters as counters_mod
+from .searchspace import SearchSpace
+
+
+class Engine:
+    def __init__(self, space: SearchSpace, meshes: dict, cache: bool = True,
+                 verbose: bool = False):
+        """meshes: {"single": Mesh, "multi": Mesh} (multi optional)."""
+        self.space = space
+        self.meshes = meshes
+        self.cache = {} if cache else None
+        self.verbose = verbose
+        self.n_compiles = 0
+        self.compile_time = 0.0
+
+    def measure(self, point: dict):
+        """Point -> flat counter dict (perf + diag) or None if infeasible."""
+        key = self.space.point_key(point)
+        if self.cache is not None and key in self.cache:
+            return self.cache[key]
+        result = None
+        if self.space.valid(point):
+            cfg, shape, policy, mesh_kind = self.space.to_run(point)
+            mesh = self.meshes.get(mesh_kind)
+            if mesh is not None:
+                try:
+                    t0 = time.time()
+                    cell = build_cell(cfg, shape, policy, mesh,
+                                      OptConfig(name=policy.optimizer))
+                    m = counters_mod.measure_cell(cell)
+                    self.n_compiles += 1
+                    self.compile_time += time.time() - t0
+                    result = {**{f"perf.{k}": v for k, v in m.perf.items()},
+                              **{f"diag.{k}": v for k, v in m.diag.items()},
+                              "_measurement": m}
+                except Exception as e:          # sharding/compile failure
+                    if self.verbose:
+                        print(f"[engine] compile failed: {e}")
+                    result = None
+        if self.cache is not None:
+            self.cache[key] = result
+        return result
+
+    def counter_names(self, sample_point) -> dict:
+        m = self.measure(sample_point)
+        if m is None:
+            raise RuntimeError("sample point infeasible")
+        return {"perf": [k for k in m if k.startswith("perf.")],
+                "diag": [k for k in m if k.startswith("diag.")]}

@@ -1,0 +1,71 @@
+"""Minimal Feature Set (paper §5.2).
+
+After detecting an anomalous workload, test each factor with the others held
+fixed: a factor belongs to the MFS iff some alternative value un-triggers the
+anomaly; its MFS condition is the set of values that keep it triggered.
+Matching a point against an MFS (paper Algorithm 1 line 5) skips redundant
+tests; reading an MFS tells a developer which condition to break (§7.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from . import anomaly as anomaly_mod
+from .searchspace import SearchSpace
+
+
+@dataclasses.dataclass
+class MFS:
+    kind: str                    # anomaly kind (A1..A4)
+    conditions: dict             # factor -> tuple of triggering values
+    witness: dict                # the anomalous point that seeded this MFS
+    counters: dict | None = None # witness counters snapshot (light)
+    n_tests: int = 0             # compiles spent constructing
+
+    def matches(self, point: dict) -> bool:
+        return all(point.get(f) in vals for f, vals in self.conditions.items())
+
+    def describe(self) -> str:
+        conds = ", ".join(
+            f"{f}={'|'.join(map(str, v))}" for f, v in
+            sorted(self.conditions.items()))
+        return f"[{self.kind}] {conds}"
+
+
+def match_any(anomaly_set, point) -> bool:
+    return any(m.matches(point) for m in anomaly_set)
+
+
+def _light(counters: dict) -> dict:
+    return {k: v for k, v in (counters or {}).items()
+            if k.startswith(("perf.", "diag."))}
+
+
+def construct_mfs(engine, space: SearchSpace, point: dict, kind: str,
+                  counters: dict | None = None) -> MFS:
+    """Paper §5.2: per-factor necessity testing with others held fixed."""
+    point = space.normalize(point)
+    conditions = {}
+    n_tests = 0
+    for f, dom in space.factors.items():
+        if len(dom) < 2:
+            continue
+        triggering = {point[f]}
+        for v in dom:
+            if v == point[f]:
+                continue
+            q = space.normalize({**point, f: v})
+            if q == point:                       # inert factor for this cell
+                triggering.add(v)
+                continue
+            if not space.valid(q):
+                continue                         # untestable: not claimed
+            m = engine.measure(q)
+            n_tests += 1
+            if m is not None and kind in anomaly_mod.kinds(m, q.get("remat",
+                                                                    "none")):
+                triggering.add(v)
+        if set(triggering) != set(dom):
+            conditions[f] = tuple(sorted(triggering, key=str))
+    return MFS(kind, conditions, dict(point), _light(counters), n_tests)

@@ -1,0 +1,46 @@
+"""Random-input fuzzing baseline (paper §5, §7.2 "random input generation")."""
+from __future__ import annotations
+
+import random
+import time
+
+from . import anomaly as anomaly_mod
+from .mfs import MFS, construct_mfs, match_any
+from .sa import Event, SearchResult
+from .searchspace import SearchSpace
+
+
+def random_search(engine, space: SearchSpace, seed: int = 0,
+                  budget_compiles: int = 200, budget_s: float = 1e9,
+                  mfs_skip: bool = False, mfs_construct: bool = False,
+                  label: str = "random") -> SearchResult:
+    rng = random.Random(seed)
+    S: list[MFS] = []
+    events: list[Event] = []
+    start = time.time()
+    start_c = engine.n_compiles
+    while engine.n_compiles - start_c < budget_compiles \
+            and time.time() - start < budget_s:
+        p = space.random_point(rng)
+        if mfs_skip and match_any(S, p):
+            continue
+        m = engine.measure(p)
+        if m is None:
+            continue
+        kinds = anomaly_mod.kinds(m, p.get("remat", "none"))
+        events.append(Event(time.time() - start, engine.n_compiles - start_c,
+                            dict(p), kinds, None))
+        if kinds and not match_any(S, p):
+            for kind in sorted(kinds):
+                if any(mf.kind == kind and mf.matches(p) for mf in S):
+                    continue
+                if mfs_construct:
+                    mf = construct_mfs(engine, space, p, kind, m)
+                else:
+                    mf = MFS(kind, {f: (p[f],) for f in space.factors}, dict(p))
+                S.append(mf)
+                events.append(Event(time.time() - start,
+                                    engine.n_compiles - start_c, dict(p),
+                                    frozenset([kind]), None, mf))
+    return SearchResult(label, "-", events, S, engine.n_compiles - start_c,
+                        time.time() - start)

@@ -1,0 +1,206 @@
+"""Algorithm 1: simulated-annealing counter-guided anomaly search.
+
+Faithful to the paper: energy deltas (B-A)/A for performance counters
+(minimized) and (A-B)/B for diagnostic counters (maximized); relaxed
+temperature schedule; MFS-match skipping (line 5); random restart after each
+new anomaly (line 17).  ``mfs_skip``/``mfs_construct`` toggles give the
+paper's Fig.5 ablations (SA-without-MFS); the events list lets benchmarks
+credit ground-truth anomalies by timestamp (the paper's Fig.4 metric).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+import time
+from typing import Any
+
+from . import anomaly as anomaly_mod
+from .mfs import MFS, construct_mfs, match_any
+from .searchspace import SearchSpace
+
+
+@dataclasses.dataclass
+class Event:
+    t: float
+    n_compiles: int
+    point: dict
+    kinds: frozenset
+    counter_value: float | None
+    new_mfs: MFS | None = None
+
+
+@dataclasses.dataclass
+class SearchResult:
+    algorithm: str
+    counter: str
+    events: list
+    anomalies: list
+    n_compiles: int
+    wall_s: float
+
+
+def _counter_value(m, counter):
+    if m is None:
+        return None
+    return m.get(counter)
+
+
+def _delta_e(a, b, mode):
+    """Paper's energy delta. mode 'min' for perf, 'max' for diag."""
+    if a is None or b is None:
+        return 0.0
+    if mode == "min":
+        return (b - a) / (abs(a) + 1e-12)
+    return (a - b) / (abs(b) + 1e-12)
+
+
+def simulated_annealing(engine, space: SearchSpace, counter: str,
+                        mode: str, seed: int = 0, budget_compiles: int = 200,
+                        budget_s: float = 1e9, t0: float = 1.0,
+                        t_min: float = 0.02, alpha: float = 0.85,
+                        n_per_t: int = 8, mfs_skip: bool = True,
+                        mfs_construct: bool = True,
+                        anomaly_set: list | None = None) -> SearchResult:
+    rng = random.Random(seed)
+    S: list[MFS] = anomaly_set if anomaly_set is not None else []
+    events: list[Event] = []
+    start = time.time()
+    start_compiles = engine.n_compiles
+
+    def spent():
+        return engine.n_compiles - start_compiles
+
+    def record(point, m, new_mfs=None):
+        k = anomaly_mod.kinds(m, point.get("remat", "none")) if m else frozenset()
+        events.append(Event(time.time() - start, spent(), dict(point), k,
+                            _counter_value(m, counter), new_mfs))
+        return k
+
+    def random_measured():
+        for _ in range(50):
+            p = space.random_point(rng)
+            if mfs_skip and match_any(S, p):
+                continue
+            m = engine.measure(p)
+            if m is not None:
+                return p, m
+        return None, None
+
+    def handle_anomaly(p, m, kinds):
+        """New-anomaly bookkeeping; returns True if genuinely new."""
+        if not kinds:
+            return False
+        if match_any(S, p):
+            return False
+        new = False
+        for kind in sorted(kinds):
+            if any(mf.kind == kind and mf.matches(p) for mf in S):
+                continue
+            if mfs_construct:
+                mf = construct_mfs(engine, space, p, kind, m)
+            else:
+                mf = MFS(kind, {f: (p[f],) for f in space.factors}, dict(p))
+            S.append(mf)
+            events.append(Event(time.time() - start, spent(), dict(p),
+                                frozenset([kind]), None, mf))
+            new = True
+        return new
+
+    p_old, m_old = random_measured()
+    if p_old is None:
+        return SearchResult("collie-sa", counter, events, S, spent(),
+                            time.time() - start)
+    k = record(p_old, m_old)
+    handle_anomaly(p_old, m_old, k)
+
+    t = t0
+    stall = 0
+    while spent() < budget_compiles and time.time() - start < budget_s:
+        for _ in range(n_per_t):
+            if spent() >= budget_compiles:
+                break
+            p_new = space.mutate(p_old, rng)
+            if mfs_skip and match_any(S, p_new):
+                continue
+            m_new = engine.measure(p_new)
+            if m_new is None:
+                continue
+            stall += 1
+            if stall > 4 * n_per_t / alpha:      # hard stall: jump out
+                stall = 0
+                p_r, m_r = random_measured()
+                if p_r is not None:
+                    p_old, m_old = p_r, m_r
+            kinds = record(p_new, m_new)
+            de = _delta_e(_counter_value(m_old, counter),
+                          _counter_value(m_new, counter), mode)
+            if de < 0 or rng.random() < math.exp(-de / max(t, 1e-9)):
+                p_old, m_old = p_new, m_new
+                if de < 0:
+                    stall = 0
+            if handle_anomaly(p_new, m_new, kinds):
+                p_old, m_old = random_measured()
+                if p_old is None:
+                    break
+        t *= alpha
+        if t < t_min:
+            # paper §5.1: "a more relaxed temperature ... enables the
+            # algorithm to jump out of a certain stage even when it has
+            # already run lots of iterations" -> re-anneal instead of stop
+            t = t0
+    return SearchResult("collie-sa", counter, events, S, spent(),
+                        time.time() - start)
+
+
+def rank_counters(engine, space: SearchSpace, names: list, seed: int = 0,
+                  n_probe: int = 10) -> list:
+    """Paper §7.2: rank counters by sigma/mu over random probe points."""
+    rng = random.Random(seed)
+    vals = {c: [] for c in names}
+    for _ in range(n_probe):
+        p = space.random_point(rng)
+        m = engine.measure(p)
+        if m is None:
+            continue
+        for c in names:
+            v = m.get(c)
+            if v is not None:
+                vals[c].append(float(v))
+    def cv(c):
+        xs = vals[c]
+        if len(xs) < 2:
+            return 0.0
+        mu = sum(xs) / len(xs)
+        var = sum((x - mu) ** 2 for x in xs) / len(xs)
+        return (var ** 0.5) / (abs(mu) + 1e-12)
+    return sorted(names, key=cv, reverse=True)
+
+
+def campaign(engine, space: SearchSpace, counters_cfg: list, seed: int = 0,
+             budget_compiles: int = 300, mfs_skip=True, mfs_construct=True,
+             label: str = "collie") -> SearchResult:
+    """Optimize each (counter, mode) in ranked order, sharing the anomaly set
+    and budget — the paper's end-to-end Collie run."""
+    S: list[MFS] = []
+    all_events = []
+    start = time.time()
+    start_c = engine.n_compiles
+    share = max(budget_compiles // max(len(counters_cfg), 1), 1)
+    for counter, mode in counters_cfg:
+        left = budget_compiles - (engine.n_compiles - start_c)
+        if left <= 0:
+            break
+        c_off = engine.n_compiles - start_c
+        t_off = time.time() - start
+        r = simulated_annealing(
+            engine, space, counter, mode, seed=seed,
+            budget_compiles=min(share, left), mfs_skip=mfs_skip,
+            mfs_construct=mfs_construct, anomaly_set=S)
+        for e in r.events:
+            e.n_compiles += c_off
+            e.t += t_off
+            all_events.append(e)
+        seed += 1
+    return SearchResult(label, "campaign", all_events, S,
+                        engine.n_compiles - start_c, time.time() - start)

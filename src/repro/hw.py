@@ -1,0 +1,34 @@
+"""Target-hardware model (TPU v5e) used by the roofline and the anomaly monitor.
+
+This container is CPU-only; these constants describe the TARGET chip, per the
+assignment:  197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12  # FLOP/s per chip
+    hbm_bw: float = 819e9            # bytes/s per chip
+    ici_bw: float = 50e9             # bytes/s per link (charged per chip, conservative)
+    hbm_bytes: float = 16 * 1024**3  # HBM capacity per chip
+    vmem_bytes: float = 128 * 1024**2
+
+
+V5E = ChipSpec()
+
+
+def roofline_terms(flops: float, bytes_hbm: float, bytes_coll: float,
+                   n_chips: int, chip: ChipSpec = V5E) -> dict:
+    """Three-term roofline (seconds) per the assignment formulas."""
+    compute_s = flops / (n_chips * chip.peak_flops_bf16)
+    memory_s = bytes_hbm / (n_chips * chip.hbm_bw)
+    coll_s = bytes_coll / (n_chips * chip.ici_bw)
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    terms["bound_s"] = terms[dom]
+    return terms

@@ -1,0 +1,52 @@
+"""Jit'd dispatch wrappers: Pallas on TPU, interpret-mode Pallas or pure-jnp
+oracle elsewhere.  Models call these; ``use_pallas`` is RunPolicy-driven."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import flash_decode as _flash_decode
+from .flash_attention import flash_attention as _flash_attention
+from .rglru_scan import rglru_scan as _rglru_scan
+from .rwkv6_kernel import rwkv6_wkv as _rwkv6_wkv
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "use_pallas",
+                                             "block_q", "block_k"))
+def attention(q, k, v, *, window=None, use_pallas=True,
+              block_q=128, block_k=128):
+    if use_pallas:
+        return _flash_attention(q, k, v, window, 0, block_q, block_k,
+                                _interpret())
+    return ref.flash_attention_ref(q, k, v, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "use_pallas", "block_k"))
+def decode_attention(q, k, v, pos, qpos, *, window=None, use_pallas=True,
+                     block_k=512):
+    if use_pallas:
+        return _flash_decode(q, k, v, pos, qpos, window=window,
+                             block_k=block_k, interpret=_interpret())
+    return ref.flash_decode_ref(q, k, v, pos, qpos, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "block_s"))
+def rglru(a, b, *, use_pallas=True, block_s=256):
+    if use_pallas:
+        return _rglru_scan(a, b, block_s=block_s, interpret=_interpret())
+    return ref.rglru_scan_ref(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "chunk"))
+def rwkv6(r, k, v, w_log, u, *, use_pallas=True, chunk=64):
+    if use_pallas:
+        return _rwkv6_wkv(r, k, v, w_log, u, chunk=chunk,
+                          interpret=_interpret())
+    return ref.rwkv6_wkv_ref(r, k, v, w_log, u)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -2.3819763e38
+
+
+def flash_attention_ref(q, k, v, window=None, causal_shift=0):
+    """q: (B,H,Sq,D); k,v: (B,KVH,Skv,D). Materialized-score attention."""
+    B, H, Sq, D = q.shape
+    KVH, Skv = k.shape[1], k.shape[2]
+    G = H // KVH
+    qr = q.reshape(B, KVH, G, Sq, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bktd->bkgqt", qr, kf) / np.sqrt(D)
+    q_pos = jnp.arange(Sq)[:, None] + causal_shift
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,bktd->bkgqd", p, vf)
+    return o.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+def flash_decode_ref(q, k, v, pos, qpos, window=None):
+    """q: (B,H,D); k,v: (B,KVH,T,D); pos (B,T); qpos (B,)."""
+    B, H, D = q.shape
+    KVH = k.shape[1]
+    G = H // KVH
+    qr = q.reshape(B, KVH, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bktd->bkgt", qr, k.astype(jnp.float32)) / np.sqrt(D)
+    mask = (pos >= 0) & (pos <= qpos[:, None])
+    if window is not None:
+        mask &= pos > (qpos[:, None] - window)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,bktd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def rglru_scan_ref(a, b):
+    """Sequential linear recurrence h_t = a_t h_{t-1} + b_t. a,b: (B,S,W)."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    a_t = a.swapaxes(0, 1)
+    b_t = b.swapaxes(0, 1)
+    _, hs = jax.lax.scan(step, jnp.zeros_like(a[:, 0]), (a_t, b_t))
+    return hs.swapaxes(0, 1)
+
+
+def rwkv6_wkv_ref(r, k, v, w_log, u):
+    """Exact sequential WKV. r,k,v,w_log: (B,H,S,hs); u: (H,hs)."""
+    B, H, S, hs = r.shape
+    rf = r.astype(jnp.float32).transpose(2, 0, 1, 3)
+    kf = k.astype(jnp.float32).transpose(2, 0, 1, 3)
+    vf = v.astype(jnp.float32).transpose(2, 0, 1, 3)
+    wf = jnp.exp(w_log.astype(jnp.float32)).transpose(2, 0, 1, 3)
+    uf = u.astype(jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        o = jnp.einsum("bhk,bhkv->bhv", rt, state + uf[None, :, :, None] * kv)
+        return wt[..., :, None] * state + kv, o
+
+    s0 = jnp.zeros((B, H, hs, hs), jnp.float32)
+    _, o = jax.lax.scan(step, s0, (rf, kf, vf, wf))
+    return o.transpose(1, 2, 0, 3)

@@ -1,0 +1,95 @@
+"""TPU Pallas chunk-parallel RWKV-6 WKV with data-dependent per-channel decay.
+
+Per head, per chunk of length C (state S0 carried in VMEM scratch across the
+sequential minor grid dim):
+
+    lp      = cumsum(w_log)                      (C, hs) inclusive, chunk-local
+    o_t     = (r_t * exp(lp_{t-1})) @ S0                        [inter-chunk]
+            + sum_c r[t,c] k[s,c] exp(lp[t-1,c]-lp[s,c])  v_s   [intra, s<t]
+            + (r_t . (u * k_t)) v_t                             [bonus diag]
+    S_new   = diag(exp(lp_C)) S0 + (k * exp(lp_C - lp))^T @ v
+
+All exp arguments are <= 0 (decay in (0,1)) so the chunked form is
+numerically safe; underflow of exp(lp) only zeroes already-decayed state.
+This is the standard chunked gated-linear-attention factorization (GLA /
+fla-style) adapted to TPU: the (C, C, hs) pairwise-decay tensor lives in
+VMEM (C=64, hs=64 -> 1 MiB f32) and feeds the MXU via two batched dots.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *, chunk):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0, 0].astype(jnp.float32)           # (C, hs)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w_log = w_ref[0, 0].astype(jnp.float32)       # (C, hs), <= 0
+    u = u_ref[0].astype(jnp.float32)              # (hs,)
+    S0 = s_ref[...]                               # (hs, hs) k-major
+
+    lp = jnp.cumsum(w_log, axis=0)                # inclusive
+    lp_prev = lp - w_log                          # exclusive
+
+    # inter-chunk: query the carried state
+    q_dec = r * jnp.exp(lp_prev)                  # (C, hs)
+    o = jax.lax.dot_general(q_dec, S0, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # intra-chunk: pairwise decay attention (strictly lower triangular)
+    ddiff = lp_prev[:, None, :] - lp[None, :, :]  # (C, C, hs); <=0 for s<t
+    pair = r[:, None, :] * k[None, :, :] * jnp.exp(jnp.minimum(ddiff, 0.0))
+    A = pair.sum(axis=-1)                         # (C, C)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    A = jnp.where(s_idx < t_idx, A, 0.0)
+    # bonus diagonal
+    bonus = (r * u[None, :] * k).sum(axis=-1)     # (C,)
+    A = A + bonus[:, None] * (s_idx == t_idx)
+    o = o + jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+    # state update
+    lpC = lp[-1]                                  # (hs,)
+    k_hat = k * jnp.exp(lpC[None, :] - lp)        # (C, hs)
+    s_ref[...] = jnp.exp(lpC)[:, None] * S0 + jax.lax.dot_general(
+        k_hat, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+def rwkv6_wkv(r, k, v, w_log, u, *, chunk=64, interpret=False):
+    """r,k,v,w_log: (B, H, S, hs); u: (H, hs). Returns o: (B, H, S, hs) f32."""
+    B, H, S, hs = r.shape
+    C = min(chunk, S)
+    nc = -(-S // C)
+    pad = nc * C - S
+    padder = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    rp, kp, vp = padder(r), padder(k), padder(v)
+    wp = jnp.pad(w_log, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rwkv6_kernel, chunk=C),
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, C, hs), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, C, hs), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, C, hs), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, C, hs), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, hs), lambda b, h, ci: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, C, hs), lambda b, h, ci: (b, h, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nc * C, hs), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hs, hs), jnp.float32)],
+        interpret=interpret,
+    )(rp, kp, vp, wp, u)
+    return out[:, :, :S]

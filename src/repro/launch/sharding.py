@@ -1,0 +1,193 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+A *rule set* maps logical axis names (declared in ParamSpecs / activation
+annotations) to an ordered list of candidate mesh-axis tuples.  For each
+tensor dim the first candidate whose mesh axes (a) all exist in the active
+mesh, (b) are not already used by another dim of the same tensor, and
+(c) whose total size divides the dim size, wins; otherwise the dim is
+replicated.  This is what lets a *fixed* production mesh (16×16 / 2×16×16)
+host all 10 assigned architectures (12-head qwen2, 8-expert mixtral, ...)
+without per-arch mesh surgery — and the rule set itself is search-dimension
+D3 of the Collie search space.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+UNCONSTRAINED = P.UNCONSTRAINED
+
+# ---------------------------------------------------------------- rule tables
+
+def _rules(**kw):
+    return {k: tuple(tuple(c) for c in v) for k, v in kw.items()}
+
+
+_COMMON = dict(
+    batch=[("pod", "data"), ("data",)],
+    layers=[],
+    head_dim=[],
+    act_embed=[],
+    norm=[],
+)
+
+PRESETS: dict[str, dict] = {
+    # Fully-sharded-data-parallel flavour: params sharded over "model",
+    # activations sharded on batch (+ sequence over "model").
+    "fsdp": _rules(**_COMMON,
+                   seq_q=[("model",)], cache_seq=[("model",)],
+                   embed=[("model",)], mlp=[], heads=[], kv_heads=[],
+                   q_per_kv=[], vocab=[("model",)], expert=[],
+                   rec_width=[("model",)], rwkv_heads=[]),
+    # Megatron-style tensor parallelism on "model".
+    "tp": _rules(**_COMMON,
+                 seq_q=[], cache_seq=[("model",)],
+                 embed=[], mlp=[("model",)], heads=[("model",)],
+                 kv_heads=[("model",)], q_per_kv=[],
+                 vocab=[("model",)], expert=[],
+                 rec_width=[("model",)], rwkv_heads=[("model",)]),
+    # Expert parallelism on "model" (falls back to within-expert TP when the
+    # expert count does not divide, e.g. mixtral 8e on a 16-way axis).
+    "ep": _rules(**_COMMON,
+                 seq_q=[], cache_seq=[("model",)],
+                 embed=[], mlp=[("model",)], heads=[("model",)],
+                 kv_heads=[("model",)], q_per_kv=[],
+                 vocab=[("model",)], expert=[("model",)],
+                 rec_width=[("model",)], rwkv_heads=[("model",)]),
+    # Pure data parallelism (the "model" axis is folded into batch).
+    "dp": _rules(**{**_COMMON, "batch": [("pod", "data", "model"),
+                                         ("data", "model"),
+                                         ("pod", "data"), ("data",)]},
+                 seq_q=[], cache_seq=[("model",)],
+                 embed=[], mlp=[], heads=[], kv_heads=[], q_per_kv=[],
+                 vocab=[], expert=[], rec_width=[], rwkv_heads=[]),
+}
+
+
+def make_rules(preset: str = "fsdp", **overrides) -> dict:
+    """Build a rule set from a preset with per-axis overrides.
+
+    Overrides use the same format: ``axis=[("model",), ()]`` etc.; an empty
+    list means "always replicate".
+    """
+    base = dict(PRESETS[preset])
+    for k, v in overrides.items():
+        base[k] = tuple(tuple(c) for c in v)
+    return base
+
+
+# ------------------------------------------------------------ spec resolution
+
+class FallbackStats:
+    """Diagnostic counter: how many dims fell back to replication."""
+    def __init__(self):
+        self.fallbacks = 0
+        self.resolved = 0
+
+    def as_dict(self):
+        return {"shard_fallbacks": self.fallbacks, "shard_resolved": self.resolved}
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[str | None],
+             rules: Mapping, mesh: Mesh, *, unconstrained: bool = False,
+             stats: FallbackStats | None = None) -> P:
+    if len(shape) != len(axes):
+        raise ValueError(f"shape {shape} vs axes {axes}")
+    used: set[str] = set()
+    out = []
+    for dim, ax in zip(shape, axes):
+        chosen = None
+        if ax is not None:
+            for cand in rules.get(ax, ()):  # unknown axis -> replicate
+                if not cand:
+                    continue
+                if any(m not in mesh.shape for m in cand):
+                    continue
+                if any(m in used for m in cand):
+                    continue
+                total = 1
+                for m in cand:
+                    total *= mesh.shape[m]
+                if total == 1 or dim % total != 0:
+                    continue
+                chosen = cand
+                break
+            if stats is not None:
+                if chosen is None:
+                    stats.fallbacks += 1
+                else:
+                    stats.resolved += 1
+        if chosen is None:
+            out.append(UNCONSTRAINED if (unconstrained and ax is not None) else None)
+        else:
+            used.update(chosen)
+            out.append(chosen if len(chosen) > 1 else chosen[0])
+    return P(*out)
+
+
+def named_sharding(mesh: Mesh, shape, axes, rules, stats=None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(shape, axes, rules, mesh, stats=stats))
+
+
+def tree_shardings(mesh: Mesh, shapes_tree, axes_tree, rules, stats=None):
+    """Map a ShapeDtypeStruct tree + axes tree -> NamedSharding tree."""
+    def walk(shapes, axes):
+        if isinstance(shapes, dict):
+            return {k: walk(shapes[k], axes[k]) for k in shapes}
+        if isinstance(shapes, (list, tuple)):
+            return type(shapes)(walk(s, a) for s, a in zip(shapes, axes))
+        return named_sharding(mesh, shapes.shape, axes, rules, stats)
+    return walk(shapes_tree, axes_tree)
+
+
+# --------------------------------------------------------- activation context
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh = None
+        self.rules = None
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Mapping):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def maybe_constrain(x, axes):
+    """Annotate an activation with logical axes (no-op outside use_rules).
+
+    Inside a partial-manual shard_map (e.g. the compressed-gradient pod
+    body), constraints are built on the *current* abstract mesh and manual
+    axes are treated as unavailable (the body already owns them).
+    """
+    if _CTX.mesh is None:
+        return x
+    mesh = _CTX.mesh
+    rules = _CTX.rules
+    try:
+        cur = jax.sharding.get_abstract_mesh()
+        if cur is not None and getattr(cur, "shape_tuple", None):
+            manual = {name for name, t in zip(cur.axis_names, cur.axis_types)
+                      if "Manual" in str(t)}
+            if manual:
+                rules = {k: tuple(c for c in v
+                                  if not any(m in manual for m in c))
+                         for k, v in rules.items()}
+                mesh = cur
+    except Exception:
+        pass
+    spec = spec_for(x.shape, axes, rules, mesh, unconstrained=True)
+    if all(s is UNCONSTRAINED or s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,123 @@
+"""Cell builder: (arch x shape x policy x mesh) -> AOT-lowerable step.
+
+Assembles abstract params/opt-state/inputs (ShapeDtypeStructs — no device
+allocation), their NamedShardings from the logical-axis rules, and the jitted
+step function with donation, then lowers/compiles on the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, RunPolicy, ShapeSpec
+from ..models import api
+from ..train.optimizer import OptConfig
+from ..train.train_step import (make_decode_step, make_init_opt,
+                                make_prefill_step, make_train_step)
+from .sharding import (FallbackStats, spec_for, tree_shardings, use_rules)
+
+
+def _zero1_shardings(mesh, shapes, axes_tree, rules, stats=None):
+    """Param-like shardings with an extra 'data'-axis shard on the first
+    still-replicated, divisible dim (ZeRO-1 optimizer-state sharding)."""
+    def walk(shapes, axes):
+        if isinstance(shapes, dict):
+            return {k: walk(shapes[k], axes[k]) for k in shapes}
+        spec = spec_for(shapes.shape, axes, rules, mesh, stats=stats)
+        parts = list(spec)
+        used = {m for p in parts if p for m in ((p,) if isinstance(p, str) else p)}
+        if "data" in mesh.shape and "data" not in used:
+            dsz = mesh.shape["data"]
+            for i, (dim, pt) in enumerate(zip(shapes.shape, parts)):
+                if pt is None and dim % dsz == 0 and dim >= dsz:
+                    parts[i] = "data"
+                    break
+        return NamedSharding(mesh, P(*parts))
+    return walk(shapes, axes_tree)
+
+
+@dataclasses.dataclass
+class Cell:
+    cfg: ModelConfig
+    shape: ShapeSpec
+    policy: RunPolicy
+    mesh: Any
+    opt: OptConfig
+    fn: Any                   # python callable
+    arg_shapes: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+    rules: dict
+    stats: FallbackStats
+
+    def lower(self):
+        with self.mesh, use_rules(self.mesh, self.rules):
+            jitted = jax.jit(self.fn,
+                             in_shardings=self.in_shardings,
+                             out_shardings=self.out_shardings,
+                             donate_argnums=self.donate_argnums)
+            return jitted.lower(*self.arg_shapes)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, policy: RunPolicy,
+               mesh, opt: OptConfig | None = None) -> Cell:
+    opt = opt or OptConfig(name=policy.optimizer)
+    rules = dict(policy.rules_dict())
+    rules.setdefault("pod_stack", (("pod",),))
+    stats = FallbackStats()
+    compute_dtype = jnp.bfloat16 if policy.dtype == "bf16" else jnp.float32
+    pdtype = jnp.float32 if policy.params_f32 else compute_dtype
+
+    pshapes = api.abstract_params(cfg, pdtype)
+    paxes = api.axes(cfg)
+    pshard = tree_shardings(mesh, pshapes, paxes, rules, stats)
+    bshapes, baxes = api.input_specs(cfg, shape, compute_dtype)
+    bshard = tree_shardings(mesh, bshapes, baxes, rules, stats)
+
+    if shape.kind == "train":
+        from ..train.optimizer import opt_state_axes
+        init_opt = make_init_opt(cfg, policy, opt, mesh)
+        oshapes = jax.eval_shape(init_opt, pshapes)
+        oaxes = {"mom": opt_state_axes(opt, paxes)["mom"], "step": ()}
+        if policy.zero1:
+            mom_shard = _zero1_shardings(mesh, oshapes["mom"], oaxes["mom"],
+                                         rules, stats)
+        else:
+            mom_shard = tree_shardings(mesh, oshapes["mom"], oaxes["mom"],
+                                       rules, stats)
+        oshard = {"mom": mom_shard,
+                  "step": NamedSharding(mesh, P())}
+        if "ef" in oshapes:
+            ef_axes = jax.tree.map(lambda a: ("pod_stack",) + tuple(a), paxes,
+                                   is_leaf=lambda a: isinstance(a, tuple))
+            oshard["ef"] = tree_shardings(mesh, oshapes["ef"], ef_axes, rules,
+                                          stats)
+        fn = make_train_step(cfg, policy, opt, mesh)
+        metrics_shard = None
+        return Cell(cfg, shape, policy, mesh, opt, fn,
+                    (pshapes, oshapes, bshapes),
+                    (pshard, oshard, bshard),
+                    (pshard, oshard, metrics_shard),
+                    (0, 1), rules, stats)
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, policy, cache_len=shape.seq_len)
+        return Cell(cfg, shape, policy, mesh, opt, fn,
+                    (pshapes, bshapes), (pshard, bshard),
+                    None, (), rules, stats)
+
+    if shape.kind == "decode":
+        sshapes, saxes = api.state_specs(cfg, shape, compute_dtype)
+        sshard = tree_shardings(mesh, sshapes, saxes, rules, stats)
+        fn = make_decode_step(cfg, policy)
+        return Cell(cfg, shape, policy, mesh, opt, fn,
+                    (pshapes, sshapes, bshapes),
+                    (pshard, sshard, bshard),
+                    (None, sshard), (1,), rules, stats)
+
+    raise ValueError(shape.kind)

@@ -1,0 +1,144 @@
+"""Public model API: specs, init, abstract shapes, input specs per shape cell.
+
+``input_specs`` follows the assignment: ShapeDtypeStruct stand-ins for every
+model input — weak-type-correct, shardable, no device allocation.  Modality
+frontends ([vlm]/[audio]) are stubs: the VLM input carries precomputed patch
+embeddings; the audio input carries EnCodec token codes directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, RunPolicy, ShapeSpec
+from . import transformer as tfm
+from .module import (count_params, init_params, param_axes, param_shapes)
+
+
+@functools.lru_cache(maxsize=64)
+def specs(cfg: ModelConfig):
+    return tfm.build_specs(cfg)
+
+
+def init(cfg: ModelConfig, key, param_dtype=jnp.float32):
+    return init_params(specs(cfg), key, param_dtype)
+
+
+def abstract_params(cfg: ModelConfig, param_dtype=jnp.float32):
+    return param_shapes(specs(cfg), param_dtype)
+
+
+def axes(cfg: ModelConfig):
+    return param_axes(specs(cfg))
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return count_params(specs(cfg))
+
+
+def n_active_params(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: top_k of n_experts)."""
+    total = count_params(specs(cfg))
+    if not cfg.n_experts:
+        return total
+    expert_p = 3 * cfg.d_model * cfg.d_ff * cfg.n_experts * cfg.n_layers
+    active = expert_p * cfg.top_k // cfg.n_experts
+    return total - expert_p + active
+
+
+def matmul_active_params(cfg: ModelConfig) -> int:
+    """Params that participate in per-token matmuls (MoE at top_k/E).
+
+    Excludes the input-embedding gather (no FLOPs) but includes the unembed
+    projection once (tied or untied) — the stable numerator for the
+    useful-FLOPs anomaly check at any model scale.
+    """
+    import numpy as np
+    tree = specs(cfg)
+    total = 0
+    from ..models.module import tree_paths
+    for path, s in tree_paths(tree):
+        if len(s.shape) < 2:
+            continue
+        n = int(np.prod(s.shape))
+        if path[0] == "embed":
+            if not cfg.tie_embeddings:
+                continue                       # gather only
+        if path[0] == "units" and len(s.axes) > 1 and s.axes[1] == "expert":
+            n = n * cfg.top_k // max(cfg.n_experts, 1)   # routed experts
+        total += n
+    return total
+
+
+# ----------------------------------------------------------------- input specs
+
+def _tok_shape(cfg: ModelConfig, B: int, S: int):
+    if cfg.frontend == "encodec":
+        return (B, S, cfg.n_codebooks)
+    return (B, S)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, compute_dtype=jnp.bfloat16):
+    """Returns (batch_shapes, batch_axes) for the step function of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        s_text = S - cfg.n_prefix if cfg.frontend == "vit" else S
+        shapes = {"tokens": jax.ShapeDtypeStruct(_tok_shape(cfg, B, s_text), i32)}
+        axes_ = {"tokens": ("batch",) + (None,) * (len(_tok_shape(cfg, B, s_text)) - 1)}
+        if cfg.frontend == "vit":
+            shapes["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_prefix, cfg.d_frontend), compute_dtype)
+            axes_["patch_embeds"] = ("batch", None, None)
+        if shape.kind == "train":
+            shapes["labels"] = jax.ShapeDtypeStruct(_tok_shape(cfg, B, S), i32)
+            axes_["labels"] = ("batch",) + (None,) * (len(_tok_shape(cfg, B, S)) - 1)
+        return shapes, axes_
+    if shape.kind == "decode":
+        shapes = {"tokens": jax.ShapeDtypeStruct(_tok_shape(cfg, B, 1), i32),
+                  "position": jax.ShapeDtypeStruct((B,), i32)}
+        axes_ = {"tokens": ("batch",) + (None,) * (len(_tok_shape(cfg, B, 1)) - 1),
+                 "position": ("batch",)}
+        return shapes, axes_
+    raise ValueError(shape.kind)
+
+
+def state_specs(cfg: ModelConfig, shape: ShapeSpec, compute_dtype=jnp.bfloat16):
+    """KV-cache / recurrent-state ShapeDtypeStructs + logical axes for decode."""
+    B, S = shape.global_batch, shape.seq_len
+    return (tfm.model_state_shapes(cfg, B, S, compute_dtype),
+            tfm.model_state_axes(cfg))
+
+
+def init_state(cfg: ModelConfig, batch: int, cache_len: int,
+               compute_dtype=jnp.bfloat16):
+    shapes = tfm.model_state_shapes(cfg, batch, cache_len, compute_dtype)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype)
+                        if s.dtype != jnp.int32
+                        else jnp.full(s.shape, -1, jnp.int32), shapes)
+
+
+def synthetic_batch(cfg: ModelConfig, shape: ShapeSpec, key,
+                    compute_dtype=jnp.bfloat16):
+    """Random concrete batch matching input_specs (for smoke tests/examples)."""
+    shapes, _ = input_specs(cfg, shape, compute_dtype)
+    out = {}
+    for k, s in shapes.items():
+        key, sub = jax.random.split(key)
+        if s.dtype == jnp.int32:
+            if k == "position":
+                out[k] = jnp.zeros(s.shape, jnp.int32)
+            else:
+                out[k] = jax.random.randint(sub, s.shape, 0, cfg.vocab_size,
+                                            jnp.int32)
+        else:
+            out[k] = jax.random.normal(sub, s.shape, jnp.float32).astype(s.dtype)
+    return out
+
+
+forward = tfm.forward
+decode_step = tfm.decode_step
+lm_loss = tfm.lm_loss

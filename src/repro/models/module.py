@@ -1,0 +1,109 @@
+"""Minimal pure-JAX parameter/module system.
+
+No flax/haiku in this environment, so parameters are declared as ``ParamSpec``
+trees (shape + logical axis names + initializer) built by pure functions of the
+model config.  This gives us, for free:
+
+* ``jax.eval_shape``-compatible init (the multi-pod dry-run never allocates),
+* a parallel *logical-axes tree* consumed by the sharding-rule engine
+  (``repro/launch/sharding.py``) — logical axis names are search-dimension D3
+  of the Collie search space,
+* deterministic per-path RNG derivation (stable across refactors).
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamSpec(NamedTuple):
+    shape: tuple
+    axes: tuple              # logical axis name per dim (str or None)
+    init: str = "normal"     # normal | zeros | ones | uniform_scale
+    scale: float = 1.0       # stddev multiplier (normal) / bound (uniform)
+    dtype: Any = None        # None -> use global param dtype
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_paths(tree, prefix=()):
+    """Yield (path, leaf) for a nested-dict tree of ParamSpecs."""
+    if is_spec(tree):
+        yield prefix, tree
+        return
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            yield from tree_paths(tree[k], prefix + (k,))
+        return
+    raise TypeError(f"unexpected node {type(tree)} at {prefix}")
+
+
+def _init_one(spec: ParamSpec, key, default_dtype):
+    dtype = spec.dtype or default_dtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "normal":
+        fan_in = spec.shape[0] if len(spec.shape) >= 1 else 1
+        std = spec.scale / np.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, spec.shape, jnp.float32)).astype(dtype)
+    if spec.init == "uniform_scale":
+        return (spec.scale * jax.random.uniform(key, spec.shape, jnp.float32, -1, 1)).astype(dtype)
+    if spec.init == "embed":
+        return (0.02 * spec.scale * jax.random.normal(key, spec.shape, jnp.float32)).astype(dtype)
+    raise ValueError(spec.init)
+
+
+def _path_key(key, path):
+    h = zlib.crc32("/".join(path).encode())
+    return jax.random.fold_in(key, np.uint32(h))
+
+
+def init_params(specs, key, default_dtype=jnp.float32):
+    """Materialize a ParamSpec tree into a param pytree (eval_shape friendly)."""
+    def walk(tree, prefix):
+        if is_spec(tree):
+            return _init_one(tree, _path_key(key, prefix), default_dtype)
+        return {k: walk(v, prefix + (k,)) for k, v in tree.items()}
+    return walk(specs, ())
+
+
+def param_shapes(specs, default_dtype=jnp.float32):
+    """ShapeDtypeStruct tree (for AOT lowering without allocation)."""
+    def walk(tree):
+        if is_spec(tree):
+            return jax.ShapeDtypeStruct(tree.shape, tree.dtype or default_dtype)
+        return {k: walk(v) for k, v in tree.items()}
+    return walk(specs)
+
+
+def param_axes(specs):
+    """Logical-axes tree parallel to the param tree."""
+    def walk(tree):
+        if is_spec(tree):
+            return tree.axes
+        return {k: walk(v) for k, v in tree.items()}
+    return walk(specs)
+
+
+def count_params(specs) -> int:
+    return int(sum(int(np.prod(s.shape)) for _, s in tree_paths(specs)))
+
+
+def stack_layer_specs(spec: ParamSpec, n_layers: int) -> ParamSpec:
+    """Prepend a scanned 'layers' dim to a per-layer spec."""
+    return ParamSpec((n_layers,) + spec.shape, ("layers",) + spec.axes,
+                     spec.init, spec.scale, spec.dtype)
+
+
+def map_specs(fn: Callable[[ParamSpec], ParamSpec], tree):
+    if is_spec(tree):
+        return fn(tree)
+    return {k: map_specs(fn, v) for k, v in tree.items()}

@@ -1,0 +1,102 @@
+"""Top-k routed mixture-of-experts with grouped sort-based dispatch.
+
+GShard-style grouped dispatch: tokens are split into G groups sharded over
+the data axes, so the gather/scatter of the dispatch stays device-local.
+The expert GEMMs sit OUTSIDE the vmapped dispatch with explicit logical-axis
+constraints at every boundary — the SPMD partitioner then shards them over
+"expert" (EP) or per-expert "mlp" (TP-in-expert) exactly as the rule set
+says, instead of falling back to replicated compute (a real anomaly the
+Collie search found during bring-up; see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .module import ParamSpec
+from .layers import act_fn
+from ..launch.sharding import maybe_constrain
+
+
+def moe_specs(d: int, f: int, n_experts: int):
+    return {
+        "router": ParamSpec((d, n_experts), ("embed", "expert")),
+        "wi_gate": ParamSpec((n_experts, d, f), ("expert", "embed", "mlp")),
+        "wi_up": ParamSpec((n_experts, d, f), ("expert", "embed", "mlp")),
+        "wo": ParamSpec((n_experts, f, d), ("expert", "mlp", "embed")),
+    }
+
+
+def _dispatch_indices(router, xf, *, top_k, cap, E):
+    """Routing + slot assignment for one group. xf: (T, D)."""
+    T = xf.shape[0]
+    logits = jnp.einsum("td,de->te", xf, router).astype(jnp.float32)
+    gate_w, gate_idx = jax.lax.top_k(logits, top_k)            # (T,k)
+    gate_w = jax.nn.softmax(gate_w, axis=-1)
+
+    flat_e = gate_idx.reshape(-1)                              # (T*k,)
+    order = jnp.argsort(flat_e)                                # stable
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(T * top_k, dtype=jnp.int32) - starts[sorted_e]
+    keep = rank < cap
+    dst_c = jnp.minimum(rank, cap - 1)
+    tok = order // top_k
+
+    buf = jnp.zeros((E, cap, xf.shape[1]), xf.dtype)
+    gathered = jnp.where(keep[:, None], xf[tok], 0)
+    buf = buf.at[sorted_e, dst_c].add(gathered)
+
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac_tokens = counts.astype(jnp.float32) / (T * top_k)
+    lb = E * jnp.sum(frac_tokens * probs.mean(axis=0))
+    w_slot = gate_w.reshape(-1)[order].astype(xf.dtype)
+    return buf, (sorted_e, dst_c, tok, keep, w_slot), lb
+
+
+def _combine_one_group(out_e, idx, T):
+    sorted_e, dst_c, tok, keep, w_slot = idx
+    y_slot = out_e[sorted_e, dst_c] * keep[:, None]
+    return jnp.zeros((T, out_e.shape[-1]), out_e.dtype).at[tok].add(
+        y_slot * w_slot[:, None])
+
+
+def apply_moe(p, x, *, top_k: int, act: str, capacity_factor: float = 1.25,
+              n_groups: int = 32):
+    """x: (B,S,D) -> (out (B,S,D), aux dict with router stats)."""
+    B, S, D = x.shape
+    T = B * S
+    E = p["router"].shape[-1]
+    G = 1
+    for g in (n_groups, 16, 8, 4, 2, 1):
+        if T % g == 0 and T // g >= E:
+            G = g
+            break
+    Tg = T // G
+    xg = x.reshape(G, Tg, D)
+    xg = maybe_constrain(xg, ("batch", None, "act_embed"))
+    cap = int(np.ceil(Tg * top_k / E * capacity_factor))
+    cap = max(1, -(-cap // 4) * 4) if cap > 4 else max(1, cap)
+
+    disp = functools.partial(_dispatch_indices, top_k=top_k, cap=cap, E=E)
+    buf, idx, lb = jax.vmap(disp, in_axes=(None, 0))(p["router"], xg)
+    # (G, E, C, D): G over data axes, E over model if divisible (EP)
+    buf = maybe_constrain(buf, ("batch", "expert", None, "act_embed"))
+
+    g_ = jnp.einsum("gecd,edf->gecf", buf, p["wi_gate"])
+    u_ = jnp.einsum("gecd,edf->gecf", buf, p["wi_up"])
+    g_ = maybe_constrain(g_, ("batch", "expert", None, "mlp"))
+    h = act_fn(act)(g_) * u_
+    out_e = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+    out_e = maybe_constrain(out_e, ("batch", "expert", None, "act_embed"))
+
+    y = jax.vmap(_combine_one_group, in_axes=(0, 0, None))(out_e, idx, Tg)
+    y = maybe_constrain(y, ("batch", None, "act_embed"))
+    aux = {"lb_loss": lb.mean(), "dropped_frac": 0.0 * lb.mean()}
+    # dropped fraction from keep masks:
+    aux["dropped_frac"] = 1.0 - idx[3].mean()
+    return y.reshape(B, S, D), aux

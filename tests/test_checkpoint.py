@@ -1,0 +1,63 @@
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import CheckpointManager
+
+
+@pytest.fixture
+def tree():
+    return {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+            "opt": {"m": jnp.ones((4,)), "step": jnp.asarray(7)}}
+
+
+def test_roundtrip(tmp_path, tree):
+    cm = CheckpointManager(str(tmp_path), async_write=False)
+    cm.save(3, tree)
+    meta, restored = cm.restore_latest(tree)
+    assert meta["step"] == 3
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+    assert int(restored["opt"]["step"]) == 7
+
+
+def test_corruption_falls_back(tmp_path, tree):
+    cm = CheckpointManager(str(tmp_path), async_write=False)
+    cm.save(1, tree)
+    cm.save(2, tree)
+    with open(os.path.join(str(tmp_path), "step_2", "arrays.npz"), "wb") as f:
+        f.write(b"corrupt")
+    meta, restored = cm.restore_latest(tree)
+    assert meta["step"] == 1
+
+
+def test_gc_keeps_last(tmp_path, tree):
+    cm = CheckpointManager(str(tmp_path), keep_last=2, async_write=False)
+    for s in (1, 2, 3, 4):
+        cm.save(s, tree)
+    assert cm.list_steps() == [3, 4]
+
+
+def test_async_save(tmp_path, tree):
+    cm = CheckpointManager(str(tmp_path), async_write=True)
+    cm.save(5, tree)
+    cm.wait()
+    meta, _ = cm.restore_latest(tree)
+    assert meta["step"] == 5
+
+
+def test_restore_empty(tmp_path, tree):
+    cm = CheckpointManager(str(tmp_path))
+    meta, restored = cm.restore_latest(tree)
+    assert meta is None and restored is None
+
+
+def test_partial_write_invisible(tmp_path, tree):
+    """A .tmp dir (simulated crash mid-write) is never restored."""
+    cm = CheckpointManager(str(tmp_path), async_write=False)
+    cm.save(1, tree)
+    os.makedirs(os.path.join(str(tmp_path), "step_9.tmp"))
+    meta, _ = cm.restore_latest(tree)
+    assert meta["step"] == 1

@@ -1,0 +1,128 @@
+"""Pure-unit tests of the HLO text analyzer on canned snippets (no jax)."""
+import pytest
+
+from repro.launch import hloanalysis as H
+
+
+def test_shape_bytes_scalars_and_tuples():
+    assert H.shape_bytes("f32[128,128]{1,0}") == 128 * 128 * 4
+    assert H.shape_bytes("bf16[2,3]{1,0}") == 12
+    assert H.shape_bytes("s32[]") == 4
+    assert H.shape_bytes("(f32[4]{0}, bf16[8]{0})") == 16 + 16
+    assert H.shape_bytes("pred[10]{0}") == 10
+    assert H.shape_bytes("token[]") == 0
+
+
+def test_split_type_op_plain():
+    t, op, operands, attrs = H._split_type_op(
+        "f32[8,8]{1,0} dot(%a, %b), lhs_contracting_dims={1}")
+    assert t.startswith("f32[8,8]")
+    assert op == "dot"
+    assert "%a" in operands
+    assert "lhs_contracting_dims" in attrs
+
+
+def test_split_type_op_tuple_result():
+    t, op, operands, attrs = H._split_type_op(
+        "(s32[], f32[2,2]{1,0}) while(%tuple.1), condition=%c, body=%b")
+    assert t.startswith("(")
+    assert op == "while"
+    assert "condition=%c" in attrs
+
+
+SIMPLE_HLO = """
+HloModule test, entry_computation_layout={()->f32[]}
+
+%body.1 (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %p = (s32[], f32[4,4]{1,0}) parameter(0)
+  %g0 = s32[] get-tuple-element(%p), index=0
+  %g1 = f32[4,4]{1,0} get-tuple-element(%p), index=1
+  %d = f32[4,4]{1,0} dot(%g1, %g1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %c1 = s32[] constant(1)
+  %a = s32[] add(%g0, %c1)
+  ROOT %t = (s32[], f32[4,4]{1,0}) tuple(%a, %d)
+}
+
+%cond.1 (p2: (s32[], f32[4,4])) -> pred[] {
+  %p2 = (s32[], f32[4,4]{1,0}) parameter(0)
+  %g = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%g, %n), direction=LT
+}
+
+ENTRY %main.1 (x: f32[4,4]) -> f32[4,4] {
+  %x = f32[4,4]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %tp = (s32[], f32[4,4]{1,0}) tuple(%z, %x)
+  %w = (s32[], f32[4,4]{1,0}) while(%tp), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %out = f32[4,4]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_while_trip_count_multiplies_flops():
+    res = H.analyze(SIMPLE_HLO)
+    # dot: 2 * 4*4 * 4 = 128 flops, x7 iterations
+    assert res["flops"] == 7 * 128
+
+
+COLLECTIVE_HLO = """
+HloModule test2, entry_computation_layout={()->f32[]}
+
+ENTRY %main.2 (x: f32[1024]) -> f32[1024] {
+  %x = f32[1024]{0} parameter(0)
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups=[2,4]<=[8], to_apply=%addc
+  %ag = f32[4096]{0} all-gather(%ar), replica_groups=[2,4]<=[8], dimensions={0}
+  ROOT %o = f32[1024]{0} slice(%ag), slice={[0:1024]}
+}
+
+%addc (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+"""
+
+
+def test_collective_bytes_and_wire_factors():
+    res = H.analyze(COLLECTIVE_HLO)
+    assert res["collective_bytes"]["all-reduce"] == 4096
+    assert res["collective_bytes"]["all-gather"] == 4096
+    # ring wire: all-reduce 2*(P-1)/P * b with P=4; all-gather (P-1)*b
+    assert res["collective_wire"]["all-reduce"] == pytest.approx(2 * 3 / 4 * 4096)
+    assert res["collective_wire"]["all-gather"] == pytest.approx(3 * 4096)
+    assert res["collective_count"] == {"all-reduce": 1, "all-gather": 1}
+
+
+def test_multipliers_nested():
+    comps = H.parse_hlo(SIMPLE_HLO)
+    edges, fus = H._call_graph(comps)
+    mult = H._multipliers(comps, edges)
+    assert mult["body.1"] == 7
+    assert mult["cond.1"] == 7
+    assert mult["main.1"] == 1
+
+
+PHANTOM_HLO = """
+HloModule test3, entry_computation_layout={()->f32[]}
+
+%wc (p0: bf16[64,64]) -> f32[64,64] {
+  %p0 = bf16[64,64]{1,0} parameter(0)
+  ROOT %cv = f32[64,64]{1,0} convert(%p0)
+}
+
+ENTRY %main.3 (a: bf16[64,64], b: bf16[64,64]) -> f32[64,64] {
+  %a = bf16[64,64]{1,0} parameter(0)
+  %b = bf16[64,64]{1,0} parameter(1)
+  %ca = f32[64,64]{1,0} fusion(%a), kind=kLoop, calls=%wc
+  %cb = f32[64,64]{1,0} fusion(%b), kind=kLoop, calls=%wc
+  ROOT %d = f32[64,64]{1,0} dot(%ca, %cb), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_phantom_upcasts_discounted():
+    res = H.analyze(PHANTOM_HLO)
+    # dot operands counted at bf16 width (2*64*64*2), result f32
+    expected = 64 * 64 * 4 + 2 * (64 * 64 * 2)
+    assert res["bytes_hbm"] == expected

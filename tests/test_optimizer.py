@@ -1,0 +1,69 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.optimizer import (OptConfig, clip_by_global_norm,
+                                   global_norm, init_opt_state, opt_update,
+                                   opt_state_axes, schedule)
+
+
+def quad_params():
+    return {"w": jnp.array([3.0, -2.0]), "b": {"c": jnp.array([[1.0, 2.0],
+                                                               [3.0, 4.0]])}}
+
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor", "sgdm"])
+def test_optimizer_decreases_quadratic(name):
+    opt = OptConfig(name=name, lr=0.1, weight_decay=0.0, warmup=0,
+                    decay_steps=1000)
+    params = quad_params()
+    state = init_opt_state(opt, params)
+
+    def loss(p):
+        return sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(p))
+
+    l0 = float(loss(params))
+    for _ in range(50):
+        grads = jax.grad(loss)(params)
+        params, state, stats = opt_update(opt, grads, state, params)
+    assert float(loss(params)) < 0.5 * l0
+    assert int(state["step"]) == 50
+
+
+def test_schedule_warmup_and_decay():
+    opt = OptConfig(lr=1.0, warmup=10, decay_steps=100, min_lr_frac=0.1)
+    s = [float(schedule(opt, jnp.asarray(t))) for t in [0, 5, 10, 100, 10_000]]
+    assert s[0] == 0.0
+    assert abs(s[1] - 0.5) < 1e-6
+    assert abs(s[2] - 1.0) < 1e-6
+    assert s[3] < s[2]
+    assert abs(s[4] - 0.1) < 1e-5            # floor
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 20.0) < 1e-4
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-4
+    # below max: untouched
+    g2 = {"a": jnp.full((4,), 0.01)}
+    c2, _ = clip_by_global_norm(g2, 1.0)
+    np.testing.assert_allclose(np.asarray(c2["a"]), 0.01, rtol=1e-5)
+
+
+def test_adafactor_memory_is_factored():
+    opt = OptConfig(name="adafactor")
+    params = {"w": jnp.zeros((64, 32))}
+    st = init_opt_state(opt, params)
+    assert st["mom"]["vr"]["w"].shape == (64,)
+    assert st["mom"]["vc"]["w"].shape == (32,)
+
+
+def test_opt_state_axes_parallel_structure():
+    axes = {"w": ("embed", "mlp"), "b": {"c": ("vocab", "embed")}}
+    out = opt_state_axes(OptConfig(name="adamw"), axes)
+    assert out["mom"]["m"]["w"] == ("embed", "mlp")
+    out2 = opt_state_axes(OptConfig(name="adafactor"), axes)
+    assert out2["mom"]["vr"]["w"] == ("embed",)
+    assert out2["mom"]["vc"]["b"]["c"] == ("embed",)

@@ -1,0 +1,97 @@
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ShapeSpec
+from repro.configs.all_archs import smoke_config
+from repro.core.searchspace import SearchSpace
+
+ARCHS = {n: smoke_config(n) for n in
+         ["qwen2-1.5b", "mixtral-8x7b", "rwkv6-7b"]}
+SHAPES = {"train_s": ShapeSpec("train_s", "train", 64, 8),
+          "long_s": ShapeSpec("long_s", "decode", 512, 1)}
+
+
+@pytest.fixture
+def space():
+    return SearchSpace(ARCHS, SHAPES)
+
+
+def test_size_is_large(space):
+    assert space.size() > 1e5
+
+
+def test_long_context_invalid_for_full_attention(space):
+    p = space.random_point(random.Random(0))
+    p["arch"] = "qwen2-1.5b"
+    p["shape"] = "long_s"
+    assert not space.valid(p)
+    p["arch"] = "rwkv6-7b"
+    assert space.valid(p)
+
+
+def test_microbatch_divisibility(space):
+    p = space.random_point(random.Random(0))
+    p.update(shape="train_s", arch="qwen2-1.5b", grad_compress="none",
+             mesh="single")
+    p["n_microbatch"] = 4                  # divides global_batch 8
+    assert space.valid(p)
+    p["n_microbatch"] = 32                 # does not divide 8
+    assert not space.valid(p)
+
+
+def test_normalize_pins_inert_factors(space):
+    rng = random.Random(1)
+    p = space.random_point(rng)
+    p["shape"] = "long_s"
+    p["remat"] = "full"
+    p["n_microbatch"] = 16
+    q = space.normalize(p)
+    assert q["remat"] == "none" and q["n_microbatch"] == 1
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=50, deadline=None)
+def test_random_points_valid(seed):
+    space = SearchSpace(ARCHS, SHAPES)
+    p = space.random_point(random.Random(seed))
+    assert space.valid(p)
+    assert p == space.normalize(p)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=50, deadline=None)
+def test_mutation_valid_and_local(seed):
+    space = SearchSpace(ARCHS, SHAPES)
+    rng = random.Random(seed)
+    p = space.random_point(rng)
+    q = space.mutate(p, rng)
+    assert space.valid(q)
+    assert q == space.normalize(q)
+    # locality: at most 1 non-pinned factor differs (normalization may pin
+    # additional factors when arch/shape changed)
+    diffs = [k for k in p if p[k] != q[k]]
+    explicit = [k for k in diffs
+                if k in ("arch", "shape", "mesh", "preset", "seq_shard",
+                         "cache_shard", "vocab_shard", "scan_layers")]
+    assert len(explicit) <= 1
+
+
+def test_to_run_round_trip(space):
+    rng = random.Random(3)
+    p = space.random_point(rng)
+    cfg, shape, policy, mesh_kind = space.to_run(p)
+    assert cfg.name.startswith(p["arch"])
+    assert shape.name == p["shape"]
+    assert mesh_kind in ("single", "multi")
+    assert policy.sharding_preset == p["preset"]
+
+
+def test_restriction(space):
+    r = SearchSpace(ARCHS, SHAPES, restrict={"preset": ("tp",),
+                                             "arch": ("rwkv6-7b",)})
+    assert r.factors["preset"] == ("tp",)
+    p = r.random_point(random.Random(0))
+    assert p["preset"] == "tp" and p["arch"] == "rwkv6-7b"
+    assert r.size() < space.size()

@@ -23,7 +23,7 @@ BUDGET = int(os.environ.get("TRACE_BUDGET", 60))
 def trace(result):
     out = []
     for e in result.events:
-        out.append({"n": e.n_compiles, "t": e.t,
+        out.append({"n": e.n_spent, "t": e.t,
                     "value": e.counter_value,
                     "anomaly": sorted(e.kinds) if e.kinds else [],
                     "new_mfs": e.new_mfs.describe() if e.new_mfs else None})
@@ -45,13 +45,13 @@ def main():
                                 budget_compiles=BUDGET, **kw)
         runs[name] = {"trace": trace(r), "anomalies": len(r.anomalies)}
         print(f"bench_counter_trace,{name},anomalies={len(r.anomalies)},"
-              f"compiles={r.n_compiles}", flush=True)
+              f"compiles={r.n_attempts}", flush=True)
     eng = Engine(space, bench_meshes())
     r = random_search(eng, space, seed=11, budget_compiles=BUDGET)
     runs["random"] = {"trace": trace(r),
                       "anomalies": len({(a.kind, tuple(sorted(a.witness.items())))
                                         for a in r.anomalies})}
-    print(f"bench_counter_trace,random,compiles={r.n_compiles}", flush=True)
+    print(f"bench_counter_trace,random,compiles={r.n_attempts}", flush=True)
     vals = [e["value"] for run in runs.values() for e in run["trace"]
             if e["value"] is not None]
     vmax = max(vals) if vals else 1.0

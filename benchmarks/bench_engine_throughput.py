@@ -1,0 +1,138 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=32")
+
+"""Engine measurement throughput: serial cold baseline vs the batched,
+persistently-cached engine on a campaign-shaped request stream.
+
+The stream mirrors how bench_search.py actually loads the engine: several
+phases (counter ranking, ground truth, per-variant runs), each served by a
+FRESH engine, drawing overlapping point sets from a common pool — plus a
+final phase that replays the first exactly (a repeated benchmark run).
+The baseline measures each phase serially with per-engine memory caches only
+(the pre-ISSUE-1 engine); the optimized path shares one on-disk measurement
+cache across phases and measures each phase as a concurrent batch.
+
+Emits points/sec for both, the speedup, and the cache hit rate, as JSON —
+future PRs track the regression.  Env knobs: SMOKE=1 shrinks everything for
+CI; COLLIE_WORKERS sets the optimized batch width (default 8).
+"""
+import json
+import random
+import shutil
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.benchscale import BENCH_SHAPES, bench_archs, bench_meshes
+from repro.core.engine import Engine
+from repro.core.measure_cache import MeasureCache
+from repro.core.searchspace import SearchSpace
+
+from common import RESULTS, save_json  # noqa: E402
+
+SMOKE = bool(int(os.environ.get("SMOKE", "0")))
+N_WORKERS = int(os.environ.get("COLLIE_WORKERS", "8"))
+POOL = 6 if SMOKE else 24          # unique points available
+PHASE = 4 if SMOKE else 16         # points requested per phase
+# distinct campaign phases, each a fresh engine — matching bench_search.py
+# at default budgets: ranking + ground truth + 6 variants x 2 seeds = 14
+# engines (the final phase here is an exact repeat run)
+N_PHASES = 2 if SMOKE else 13
+
+
+def sample_pool(space, n, seed=0):
+    rng = random.Random(seed)
+    pts, seen = [], set()
+    while len(pts) < n:
+        p = space.random_point(rng)
+        k = space.point_key(p)
+        if k not in seen:
+            seen.add(k)
+            pts.append(p)
+    return pts
+
+
+def make_stream(pool, seed=1):
+    """Per-phase request lists: overlapping draws + an exact repeat run."""
+    rng = random.Random(seed)
+    phases = [pool[:PHASE]]                        # phase 1: first visit
+    for _ in range(N_PHASES - 1):
+        phases.append([pool[rng.randrange(len(pool))] for _ in range(PHASE)])
+    phases.append(list(phases[0]))                 # repeated benchmark run
+    return phases
+
+
+def run_serial(space, meshes, phases):
+    """Pre-ISSUE-1 behavior: fresh engine per phase, serial, memory cache."""
+    t0 = time.time()
+    compiles = 0
+    for phase in phases:
+        eng = Engine(space, meshes, n_workers=1, persistent_cache=False)
+        for p in phase:
+            eng.measure(p)
+        compiles += eng.n_compiles + eng.n_failures
+    return time.time() - t0, compiles
+
+
+def run_optimized(space, meshes, phases, cache_path):
+    """Fresh engine per phase sharing one persistent cache, batched."""
+    cache = MeasureCache(cache_path)
+    t0 = time.time()
+    compiles = 0
+    hits = misses = 0
+    for phase in phases:
+        eng = Engine(space, meshes, n_workers=N_WORKERS,
+                     persistent_cache=cache)
+        eng.measure_batch(phase)
+        s = eng.stats()
+        compiles += s["n_compiles"] + s["n_failures"]
+        hits += s["n_cache_hits"] + s["n_disk_hits"]
+        misses += s["n_cache_misses"]
+    cache.close()
+    return time.time() - t0, compiles, hits / max(hits + misses, 1)
+
+
+def main():
+    space = SearchSpace(bench_archs(["qwen2-1.5b", "mixtral-8x7b"]),
+                        BENCH_SHAPES,
+                        restrict={"grad_compress": ("none",),
+                                  "scan_layers": (True,)})
+    meshes = bench_meshes()
+    pool = sample_pool(space, POOL)
+    phases = make_stream(pool)
+    n_requests = sum(len(ph) for ph in phases)
+
+    cache_path = os.path.join(RESULTS, "bench_throughput_cache.sqlite")
+    for suffix in ("", "-wal", "-shm"):            # cold start
+        try:
+            os.remove(cache_path + suffix)
+        except FileNotFoundError:
+            pass
+
+    serial_s, serial_compiles = run_serial(space, meshes, phases)
+    opt_s, opt_compiles, hit_rate = run_optimized(space, meshes, phases,
+                                                  cache_path)
+    serial_pps = n_requests / serial_s
+    opt_pps = n_requests / opt_s
+    out = {
+        "n_requests": n_requests,
+        "n_unique": len(pool),
+        "n_phases": len(phases),
+        "serial_s": serial_s, "serial_pps": serial_pps,
+        "serial_compiles": serial_compiles,
+        "optimized_s": opt_s, "optimized_pps": opt_pps,
+        "optimized_compiles": opt_compiles,
+        "speedup": opt_pps / serial_pps,
+        "cache_hit_rate": hit_rate,
+        "n_workers": N_WORKERS,
+    }
+    save_json("bench_engine_throughput.json", out)
+    print(f"bench_engine_throughput,serial={serial_pps:.2f}pps,"
+          f"optimized={opt_pps:.2f}pps,speedup={out['speedup']:.1f}x,"
+          f"hit_rate={hit_rate:.2f},"
+          f"compiles={serial_compiles}->{opt_compiles}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

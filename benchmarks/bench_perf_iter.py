@@ -38,6 +38,25 @@ CELLS = [
     ("deepseek-67b", "decode_32k", False, {}),
 ]
 
+# SMOKE=1 (CI): one bench-scale cell, no recorded-baseline comparison
+SMOKE = bool(int(os.environ.get("SMOKE", "0")))
+
+
+def smoke_main():
+    from repro.core.benchscale import BENCH_SHAPES, bench_config, bench_meshes
+    t0 = time.time()
+    cfg = bench_config("qwen2-1.5b")
+    shape = BENCH_SHAPES["train_s"]
+    mesh = bench_meshes()["single"]
+    pol = default_policy(cfg, shape, n_microbatch=1)
+    m = measure_cell(build_cell(cfg, shape, pol, mesh))
+    r = m.roofline
+    print(f"bench_perf_iter,smoke,bound_ms={r['bound_s']*1e3:.1f},"
+          f"dominant={r['dominant']}", flush=True)
+    save_json("bench_perf_iter_smoke.json",
+              {"bound_s": r["bound_s"], "dominant": r["dominant"],
+               "wall_s": time.time() - t0})
+
 
 def main():
     t0 = time.time()
@@ -67,4 +86,4 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    smoke_main() if SMOKE else main()

@@ -21,16 +21,33 @@ from repro.core.benchscale import BENCH_SHAPES, bench_archs, bench_meshes
 from repro.core.bo import bo_search
 from repro.core.catalog import render_markdown, save_catalog
 from repro.core.engine import Engine
+from repro.core.measure_cache import MeasureCache
 from repro.core.random_search import random_search
 from repro.core.sa import campaign, rank_counters, simulated_annealing
 from repro.core.searchspace import SearchSpace
 
-from common import credit_events, save_json, summarize_credits  # noqa: E402
+from common import RESULTS, credit_events, save_json, summarize_credits  # noqa: E402
 
 ARCH_SUBSET = os.environ.get("ARCHS", "qwen2-1.5b,mixtral-8x7b,rwkv6-7b,recurrentgemma-2b").split(",")
 GT_BUDGET = int(os.environ.get("GT_BUDGET", 200))
 RUN_BUDGET = int(os.environ.get("RUN_BUDGET", 70))
 SEEDS = (0,) if os.environ.get("RUN_BUDGET") else (0, 1)
+N_WORKERS = int(os.environ.get("COLLIE_WORKERS", "8"))
+
+# one persistent measurement cache shared by every engine in this run (and
+# by repeat runs: a warm cache performs zero recompiles for known points).
+# COLLIE_CACHE overrides the location; COLLIE_CACHE=0 disables.
+_cache_env = os.environ.get("COLLIE_CACHE")
+if _cache_env == "0":
+    SHARED_CACHE = None
+else:
+    os.makedirs(RESULTS, exist_ok=True)
+    SHARED_CACHE = MeasureCache(
+        _cache_env or os.path.join(RESULTS, "measure_cache.sqlite"))
+
+_STAT_KEYS = ("n_attempts", "n_compiles", "n_failures", "n_cache_hits",
+              "n_disk_hits", "n_cache_misses", "compile_time")
+_agg = {k: 0 for k in _STAT_KEYS}
 
 DIAG = [("diag.collective_blowup", "max"), ("diag.memory_overshoot", "max"),
         ("diag.transpose_bytes", "max")]
@@ -39,7 +56,24 @@ PERF = [("perf.roofline_efficiency", "min"),
 
 
 def fresh(space):
-    return Engine(space, bench_meshes())
+    return Engine(space, bench_meshes(), n_workers=N_WORKERS,
+                  persistent_cache=SHARED_CACHE if SHARED_CACHE is not None
+                  else False)
+
+
+def collect(engine):
+    """Fold a finished engine's counters into the run aggregate (so the
+    engine — and its cached Measurement objects — can be collected)."""
+    s = engine.stats()
+    for k in _STAT_KEYS:
+        _agg[k] += s[k]
+
+
+def aggregate_stats():
+    agg = dict(_agg)
+    hits = agg["n_cache_hits"] + agg["n_disk_hits"]
+    agg["cache_hit_rate"] = hits / max(hits + agg["n_cache_misses"], 1)
+    return agg
 
 
 def main():
@@ -56,6 +90,7 @@ def main():
     ranked = rank_counters(eng, space,
                            [c for c, _ in DIAG] + [c for c, _ in PERF],
                            seed=123)
+    collect(eng)
     print(f"# counter ranking: {ranked}", flush=True)
     diag_ranked = [(c, "max") for c in ranked if c.startswith("diag.")]
     perf_ranked = [(c, "min") for c in ranked if c.startswith("perf.")]
@@ -67,8 +102,9 @@ def main():
     save_catalog(gt.anomalies, os.path.join(os.path.dirname(__file__),
                                             "results", "bench_gt_catalog.json"),
                  {"budget": GT_BUDGET, "space": space.size()})
+    collect(gt_engine)
     print(f"# ground truth: {len(gt.anomalies)} anomalies "
-          f"({gt.n_compiles} compiles, {gt.wall_s:.0f}s)", flush=True)
+          f"({gt.n_attempts} attempts, {gt.wall_s:.0f}s)", flush=True)
     print(render_markdown(gt.anomalies, "Ground-truth anomalies (bench scale)"),
           flush=True)
 
@@ -100,6 +136,7 @@ def main():
         for seed in SEEDS:
             e = fresh(space)
             r = fn(e, seed)
+            collect(e)
             credits.append(credit_events(r.events, gt.anomalies))
         s = summarize_credits(credits, len(gt.anomalies))
         summary[name] = s
@@ -109,13 +146,19 @@ def main():
         print(f"bench_search,{name},found={s['n_found']}/{s['n_gt']},"
               f"mean_compiles_to_find={mean_str}", flush=True)
 
+    engine_stats = aggregate_stats()
     save_json("bench_search.json", {
         "ground_truth_n": len(gt.anomalies),
         "budget": RUN_BUDGET, "seeds": list(SEEDS),
         "ranking": ranked,
         "summary": summary,
+        "engine_stats": engine_stats,
         "wall_s": time.time() - t0,
     })
+    print(f"# engine: {engine_stats['n_compiles']} compiles, "
+          f"{engine_stats['n_failures']} failures, "
+          f"hit_rate={engine_stats['cache_hit_rate']:.2f} "
+          f"(disk {engine_stats['n_disk_hits']})", flush=True)
     print(f"# total {time.time()-t0:.0f}s", flush=True)
 
 

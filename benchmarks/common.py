@@ -21,13 +21,13 @@ def load_json(name: str):
 def credit_events(events, ground_truth) -> dict:
     """Paper Fig.4 metric: for each ground-truth anomaly, the compile count
     at which this run first measured a point inside its MFS with the anomaly
-    firing.  Returns {gt_index: n_compiles or None}."""
+    firing.  Returns {gt_index: n_spent or None}."""
     out = {}
     for i, gt in enumerate(ground_truth):
         found = None
         for e in events:
             if gt.kind in e.kinds and gt.matches(e.point):
-                found = e.n_compiles
+                found = e.n_spent
                 break
         out[i] = found
     return out

@@ -25,12 +25,15 @@ BENCHES = [
     ("bench_counter_trace.py", "Fig.6 counter trace", {}, 32),
     ("bench_anomaly_table.py", "Table 2 production catalog", {}, 512),
     ("bench_perf_iter.py", "Perf hillclimb validation", {}, 512),
+    ("bench_engine_throughput.py", "engine points/sec + cache hit rate", {}, 32),
 ]
 
 FAST_ENV = {
     "bench_search.py": {"GT_BUDGET": "70", "RUN_BUDGET": "25"},
     "bench_counter_trace.py": {"TRACE_BUDGET": "22"},
     "bench_anomaly_table.py": {"CATALOG_BUDGET": "45"},
+    "bench_engine_throughput.py": {"SMOKE": "1"},
+    "bench_perf_iter.py": {"SMOKE": "1"},
 }
 
 

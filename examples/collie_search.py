@@ -48,7 +48,7 @@ def main():
     order = [(c, "max" if c.startswith("diag.") else "min") for c in ranked]
     r = campaign(eng, space, order, seed=3, budget_compiles=args.budget)
 
-    print(f"\n{len(r.anomalies)} anomalies in {r.n_compiles} compiles "
+    print(f"\n{len(r.anomalies)} anomalies in {r.n_attempts} attempts "
           f"({r.wall_s:.0f}s)\n")
     print(render_markdown(r.anomalies, "Anomalies in the restricted space"))
 

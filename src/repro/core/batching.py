@@ -1,0 +1,57 @@
+"""Adapters between search drivers and measurement engines.
+
+Search algorithms produce *proposal batches*; a real `engine.Engine`
+measures them concurrently with dedup + caching, while lightweight synthetic
+engines (tests, oracles) may only implement serial ``measure``.  These
+helpers keep the drivers agnostic:
+
+* ``measure_batch(engine, points)`` — concurrent when the engine supports
+  it, serial loop otherwise; results align with ``points``.
+* ``spent(engine)`` — the budget counter: ``n_attempts`` (unique points
+  requested, counting failed compiles) when available, else the legacy
+  ``n_compiles``.
+* ``engine_stats(engine)`` — SearchResult-adjacent stats snapshot, {} for
+  engines that don't track any.
+"""
+from __future__ import annotations
+
+
+def measure_batch(engine, points: list) -> list:
+    mb = getattr(engine, "measure_batch", None)
+    if mb is not None:
+        return mb(points)
+    return [engine.measure(p) for p in points]
+
+
+def measure_batch_spent(engine, points: list) -> tuple:
+    """-> (results, budget-spent as of each point's submission).
+
+    The per-point spent values keep event crediting ("anomaly found after N
+    attempts") exact under batching — a hit on the first proposal of an
+    8-wide batch is credited at its own submission count, not the batch's.
+    """
+    mb = getattr(engine, "measure_batch", None)
+    if mb is not None:
+        import inspect
+        try:
+            accepts = "with_spent" in inspect.signature(mb).parameters
+        except (TypeError, ValueError):    # uninspectable callable
+            accepts = False
+        if accepts:
+            return mb(points, with_spent=True)
+        return mb(points), [spent(engine)] * len(points)
+    results, spents = [], []
+    for p in points:
+        results.append(engine.measure(p))
+        spents.append(spent(engine))
+    return results, spents
+
+
+def spent(engine) -> int:
+    n = getattr(engine, "n_attempts", None)
+    return engine.n_compiles if n is None else n
+
+
+def engine_stats(engine) -> dict:
+    s = getattr(engine, "stats", None)
+    return s() if callable(s) else {}

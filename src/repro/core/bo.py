@@ -5,6 +5,11 @@ one-hot/ordinal encoding of the search space; Expected-Improvement
 acquisition maximized over a random candidate pool + mutations of the
 incumbent.  MFS-enhanced like the paper's BO baseline ("for a fair
 comparison, we use MFS to enhance BO as well").
+
+Batched: the ``n_init`` seeding pool and, per GP iteration, the top-``q``
+acquisition candidates are measured as one concurrent batch, then processed
+sequentially in acquisition order — results are independent of the engine's
+``n_workers``.
 """
 from __future__ import annotations
 
@@ -15,6 +20,7 @@ import time
 import numpy as np
 
 from . import anomaly as anomaly_mod
+from . import batching
 from .mfs import MFS, construct_mfs, match_any
 from .sa import Event, SearchResult
 from .searchspace import SearchSpace
@@ -58,8 +64,9 @@ def _ei(mu, sigma, best, minimize=True):
 
 def bo_search(engine, space: SearchSpace, counter: str, mode: str,
               seed: int = 0, budget_compiles: int = 200, budget_s: float = 1e9,
-              n_init: int = 8, pool: int = 128, mfs_skip: bool = True,
-              mfs_construct: bool = True, anomaly_set: list | None = None,
+              n_init: int = 8, pool: int = 128, q: int = 4,
+              mfs_skip: bool = True, mfs_construct: bool = True,
+              anomaly_set: list | None = None,
               label: str = "bo") -> SearchResult:
     rng = random.Random(seed)
     enc = _encoder(space)
@@ -67,42 +74,45 @@ def bo_search(engine, space: SearchSpace, counter: str, mode: str,
     events: list[Event] = []
     X, y, pts = [], [], []
     start = time.time()
-    start_c = engine.n_compiles
+    start_c = batching.spent(engine)
     minimize = (mode == "min")
 
     def spent():
-        return engine.n_compiles - start_c
+        return batching.spent(engine) - start_c
 
-    def observe(p):
-        m = engine.measure(p)
-        if m is None:
-            return None
-        v = m.get(counter)
-        kinds = anomaly_mod.kinds(m, p.get("remat", "none"))
-        events.append(Event(time.time() - start, spent(), dict(p), kinds, v))
-        if v is not None:
-            X.append(enc(p))
-            y.append(float(v))
-            pts.append(p)
-        if kinds and not match_any(S, p):
-            for kind in sorted(kinds):
-                if any(mf.kind == kind and mf.matches(p) for mf in S):
-                    continue
-                mf = construct_mfs(engine, space, p, kind, m) if mfs_construct \
-                    else MFS(kind, {f: (p[f],) for f in space.factors}, dict(p))
-                S.append(mf)
-                events.append(Event(time.time() - start, spent(), dict(p),
-                                    frozenset([kind]), None, mf))
-        return v
+    def observe_batch(cands):
+        """Measure candidates concurrently, fold into the GP sequentially."""
+        results, spents = batching.measure_batch_spent(engine, cands)
+        for p, m, sp in zip(cands, results, spents):
+            if m is None:
+                continue
+            v = m.get(counter)
+            kinds = anomaly_mod.kinds(m, p.get("remat", "none"))
+            events.append(Event(time.time() - start, sp - start_c, dict(p),
+                                kinds, v))
+            if v is not None:
+                X.append(enc(p))
+                y.append(float(v))
+                pts.append(p)
+            if kinds and not match_any(S, p):
+                for kind in sorted(kinds):
+                    if any(mf.kind == kind and mf.matches(p) for mf in S):
+                        continue
+                    mf = construct_mfs(engine, space, p, kind, m) \
+                        if mfs_construct \
+                        else MFS(kind, {f: (p[f],) for f in space.factors},
+                                 dict(p))
+                    S.append(mf)
+                    events.append(Event(time.time() - start, spent(), dict(p),
+                                        frozenset([kind]), None, mf))
 
-    for _ in range(n_init):
-        if spent() >= budget_compiles:
-            break
-        observe(space.random_point(rng))
+    n_seed = min(n_init, max(budget_compiles - spent(), 0))
+    if n_seed:
+        observe_batch([space.random_point(rng) for _ in range(n_seed)])
 
     while spent() < budget_compiles and time.time() - start < budget_s:
         if len(X) < 2:
-            observe(space.random_point(rng))
+            observe_batch([space.random_point(rng)])
             continue
         Xa = np.array(X)
         ya = np.array(y)
@@ -119,6 +129,8 @@ def bo_search(engine, space: SearchSpace, counter: str, mode: str,
         mu, sigma = _gp_posterior(Xa, yn, Xc, ls)
         best = yn.min() if minimize else yn.max()
         acq = _ei(mu, sigma, best, minimize)
-        observe(cands[int(np.argmax(acq))])
+        n_q = min(q, max(budget_compiles - spent(), 1), len(cands))
+        top = np.argsort(-acq, kind="stable")[:n_q]
+        observe_batch([cands[int(i)] for i in top])
     return SearchResult(label, counter, events, S, spent(),
-                        time.time() - start)
+                        time.time() - start, batching.engine_stats(engine))

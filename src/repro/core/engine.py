@@ -1,37 +1,169 @@
-"""The workload engine (paper §4 "Workload engine" + §6).
+"""The workload engine (paper §4 "Workload engine" + §6), concurrent.
 
 Translates a search-space point into a concrete compiled workload on the
 production mesh and returns its counters.  Compilation failures / invalid
 settings are reported as None (the search skips them), mirroring the paper's
 engine rejecting unsatisfiable verb combinations.
+
+Throughput layers (this is the search hot path — see ISSUE 1):
+
+* ``measure_batch(points)`` measures a proposal batch on a thread pool (XLA
+  compilation happens in C++ and can overlap); duplicate points within a
+  batch or already in flight are measured once, with waiters sharing the
+  result.
+* A thread-safe in-memory cache keyed by the *normalized* point serves
+  repeats for free, and an optional persistent cross-campaign cache
+  (``measure_cache.MeasureCache``; ``COLLIE_CACHE`` env var) warm-starts
+  whole benchmark runs — previously measured points (including known compile
+  failures) are never recompiled.
+
+Budget accounting: ``n_attempts`` is the budget currency — it charges once
+per *unique* point requested, whether the compile succeeds, fails, or is
+served from cache.  Failed compiles therefore consume search budget (they
+previously did not, silently inflating SA/MFS budgets on infeasible-heavy
+regions), and warm-cache runs follow byte-identical search trajectories to
+cold runs.  ``n_compiles`` counts only successful compiles.
 """
 from __future__ import annotations
 
+import os
+import threading
 import time
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any
 
 from ..train.optimizer import OptConfig
 from ..launch.steps import build_cell
 from . import counters as counters_mod
+from .measure_cache import MeasureCache, space_fingerprint
 from .searchspace import SearchSpace
 
 
 class Engine:
     def __init__(self, space: SearchSpace, meshes: dict, cache: bool = True,
-                 verbose: bool = False):
-        """meshes: {"single": Mesh, "multi": Mesh} (multi optional)."""
+                 verbose: bool = False, n_workers: int | None = None,
+                 persistent_cache=None):
+        """meshes: {"single": Mesh, "multi": Mesh} (multi optional).
+
+        n_workers: thread-pool width for measure_batch (default: the
+        COLLIE_WORKERS env var, else 1 — serial).
+        persistent_cache: a MeasureCache, a path, or None (default: the
+        COLLIE_CACHE env var if set).  Pass False to force-disable.
+        """
         self.space = space
         self.meshes = meshes
         self.cache = {} if cache else None
         self.verbose = verbose
-        self.n_compiles = 0
+        if n_workers is None:
+            raw = os.environ.get("COLLIE_WORKERS", "1") or "1"
+            try:
+                n_workers = int(raw)
+            except ValueError:
+                raise ValueError(
+                    f"COLLIE_WORKERS must be an integer, got {raw!r}")
+        self.n_workers = max(int(n_workers), 1)
+        if persistent_cache is None:
+            env = os.environ.get("COLLIE_CACHE")
+            persistent_cache = env if env and env != "0" else None
+        if persistent_cache is False:
+            persistent_cache = None
+        if isinstance(persistent_cache, (str, os.PathLike)):
+            persistent_cache = MeasureCache(os.fspath(persistent_cache))
+        self.persistent = persistent_cache
+        self.space_fp = (space_fingerprint(space, meshes)
+                         if self.persistent is not None else None)
+        self._lock = threading.RLock()
+        self._inflight: dict = {}      # point key -> Future
+        self._charged: set = set()     # unique keys that consumed budget
+        self.n_attempts = 0        # budget: unique points requested
+        self.n_compiles = 0        # successful compiles
+        self.n_failures = 0        # failed compile attempts
+        self.n_cache_hits = 0      # in-memory / in-flight hits (incl. repeats)
+        self.n_disk_hits = 0       # persistent-cache hits
+        self.n_cache_misses = 0    # requests that had to compile
         self.compile_time = 0.0
 
+    # ------------------------------------------------------------- measure
     def measure(self, point: dict):
         """Point -> flat counter dict (perf + diag) or None if infeasible."""
         key = self.space.point_key(point)
-        if self.cache is not None and key in self.cache:
-            return self.cache[key]
+        return self._measure_key(key, point)
+
+    def measure_batch(self, points: list, n_workers: int | None = None,
+                      with_spent: bool = False):
+        """Measure a batch of points, deduplicated, on a thread pool.
+
+        Returns counter dicts (or None) aligned with ``points``.  Budget is
+        charged for every unique point at submission, in list order, so
+        accounting — and therefore any search driven by it — is identical
+        for any n_workers (including 1).
+
+        with_spent=True additionally returns the n_attempts total as of each
+        point's submission, so event crediting ("found after N attempts")
+        stays per-point exact instead of rounding up to the batch width.
+        """
+        nw = self.n_workers if n_workers is None else max(int(n_workers), 1)
+        keys = [self.space.point_key(p) for p in points]
+        spents = []
+        with self._lock:
+            for k in keys:
+                self._charge(k)
+                spents.append(self.n_attempts)
+        if nw <= 1 or len(points) <= 1:
+            results = [self._measure_key(k, p) for k, p in zip(keys, points)]
+        else:
+            with ThreadPoolExecutor(max_workers=nw) as ex:
+                results = list(ex.map(self._measure_key, keys, points))
+        return (results, spents) if with_spent else results
+
+    # ------------------------------------------------------------ internals
+    def _charge(self, key):
+        if key not in self._charged:
+            self._charged.add(key)
+            self.n_attempts += 1
+
+    def _measure_key(self, key, point):
+        with self._lock:
+            self._charge(key)
+            if self.cache is not None and key in self.cache:
+                self.n_cache_hits += 1
+                return self.cache[key]
+            fut = self._inflight.get(key)
+            if fut is None:
+                mine = Future()
+                self._inflight[key] = mine
+            else:
+                self.n_cache_hits += 1     # another thread is resolving it
+        if fut is not None:
+            return fut.result()
+        # owner path: disk lookup and compile both happen OUTSIDE the engine
+        # lock (MeasureCache has its own lock) so concurrent threads are
+        # never serialized behind sqlite I/O or XLA
+        try:
+            found, result = (self.persistent.get(self.space_fp, key)
+                             if self.persistent is not None
+                             else (False, None))
+            if not found:
+                result = self._compile(point)
+        except BaseException as e:         # never strand waiters
+            with self._lock:
+                self._inflight.pop(key, None)
+            mine.set_exception(e)
+            raise
+        if not found and self.persistent is not None:
+            self.persistent.put(self.space_fp, key, result)
+        with self._lock:
+            if found:
+                self.n_disk_hits += 1
+            else:
+                self.n_cache_misses += 1
+            if self.cache is not None:
+                self.cache[key] = result
+            self._inflight.pop(key, None)
+        mine.set_result(result)
+        return result
+
+    def _compile(self, point):
         result = None
         if self.space.valid(point):
             cfg, shape, policy, mesh_kind = self.space.to_run(point)
@@ -42,18 +174,37 @@ class Engine:
                     cell = build_cell(cfg, shape, policy, mesh,
                                       OptConfig(name=policy.optimizer))
                     m = counters_mod.measure_cell(cell)
-                    self.n_compiles += 1
-                    self.compile_time += time.time() - t0
+                    with self._lock:
+                        self.n_compiles += 1
+                        self.compile_time += time.time() - t0
                     result = {**{f"perf.{k}": v for k, v in m.perf.items()},
                               **{f"diag.{k}": v for k, v in m.diag.items()},
                               "_measurement": m}
                 except Exception as e:          # sharding/compile failure
+                    with self._lock:
+                        self.n_failures += 1
                     if self.verbose:
                         print(f"[engine] compile failed: {e}")
                     result = None
-        if self.cache is not None:
-            self.cache[key] = result
         return result
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        """Counter snapshot (SearchResult-adjacent; cheap to copy)."""
+        with self._lock:
+            hits = self.n_cache_hits + self.n_disk_hits
+            total = hits + self.n_cache_misses
+            return {
+                "n_attempts": self.n_attempts,
+                "n_compiles": self.n_compiles,
+                "n_failures": self.n_failures,
+                "n_cache_hits": self.n_cache_hits,
+                "n_disk_hits": self.n_disk_hits,
+                "n_cache_misses": self.n_cache_misses,
+                "cache_hit_rate": hits / total if total else 0.0,
+                "compile_time": self.compile_time,
+                "n_workers": self.n_workers,
+            }
 
     def counter_names(self, sample_point) -> dict:
         m = self.measure(sample_point)

@@ -1,0 +1,138 @@
+"""Persistent cross-campaign measurement cache.
+
+The engine's dominant cost is compiling candidate workloads; bench campaigns
+(ground-truth phase + per-variant runs + per-factor MFS probes) re-measure
+heavily overlapping point sets from *fresh* engines, and repeat benchmark
+invocations recompile everything.  This sqlite-backed store is keyed by
+``(space fingerprint, canonical point key)`` and holds the flat
+``perf.*``/``diag.*`` counter dict of each measured point — compile
+*failures* are stored as null so warm runs skip known-infeasible points
+without retrying them.
+
+The space fingerprint covers everything that could change a measurement:
+factor domains, full arch/shape configs, mesh shapes, the JAX version and
+backend.  A stale cache is therefore impossible to hit silently — any config
+or toolchain change changes the fingerprint and cold-starts that slice.
+
+Enable per-engine via ``Engine(..., persistent_cache=path)`` or process-wide
+with the ``COLLIE_CACHE`` env var.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import sqlite3
+import threading
+import time
+
+
+def _jsonable(x):
+    try:
+        json.dumps(x)
+        return x
+    except TypeError:
+        return float(x) if hasattr(x, "__float__") else str(x)
+
+
+def space_fingerprint(space, meshes: dict | None = None) -> str:
+    """Hash of every measurement-relevant input (see module docstring)."""
+    desc = {
+        "factors": {k: [repr(v) for v in vs]
+                    for k, vs in sorted(space.factors.items())},
+        "archs": {n: dataclasses.asdict(c)
+                  for n, c in sorted(space.archs.items())},
+        "shapes": {n: dataclasses.asdict(s)
+                   for n, s in sorted(space.shapes.items())},
+    }
+    if meshes:
+        def mesh_desc(m):
+            try:
+                return {"axes": list(m.axis_names),
+                        "shape": [int(m.shape[a]) for a in m.axis_names]}
+            except Exception:          # non-Mesh stand-ins (tests, stubs)
+                return {"type": type(m).__name__}
+        desc["meshes"] = {kind: mesh_desc(m)
+                          for kind, m in sorted(meshes.items())
+                          if m is not None}
+    try:
+        import jax
+        desc["jax"] = jax.__version__
+        desc["backend"] = jax.default_backend()
+    except Exception:
+        pass
+    blob = json.dumps(desc, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def point_key_str(key) -> str:
+    """Canonical text form of a SearchSpace.point_key tuple."""
+    return json.dumps([[k, _jsonable(v)] for k, v in key])
+
+
+class MeasureCache:
+    """Thread-safe on-disk measurement store (sqlite, WAL)."""
+
+    def __init__(self, path: str):
+        if os.path.isdir(path) or path.endswith(os.sep):
+            path = os.path.join(path, "collie_measure_cache.sqlite")
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        self.path = path
+        self._lock = threading.Lock()
+        self._conn = sqlite3.connect(path, check_same_thread=False,
+                                     timeout=30.0)
+        with self._lock:
+            self._conn.execute("PRAGMA journal_mode=WAL")
+            self._conn.execute(
+                "CREATE TABLE IF NOT EXISTS measurements ("
+                " space TEXT NOT NULL, key TEXT NOT NULL, value TEXT,"
+                " created REAL NOT NULL, PRIMARY KEY (space, key))")
+            self._conn.commit()
+
+    def get(self, space_fp: str, key) -> tuple:
+        """-> (found, counters-dict-or-None).  found=True with a None value
+        means the point was measured before and failed to compile."""
+        k = point_key_str(key)
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT value FROM measurements WHERE space=? AND key=?",
+                (space_fp, k)).fetchone()
+        if row is None:
+            return False, None
+        return True, (None if row[0] is None else json.loads(row[0]))
+
+    def put(self, space_fp: str, key, counters: dict | None):
+        if counters is not None:
+            counters = {k: _jsonable(v) for k, v in counters.items()
+                        if not k.startswith("_")}
+        val = None if counters is None else json.dumps(counters)
+        k = point_key_str(key)
+        with self._lock:
+            self._conn.execute(
+                "INSERT OR REPLACE INTO measurements VALUES (?,?,?,?)",
+                (space_fp, k, val, time.time()))
+            self._conn.commit()
+
+    def size(self, space_fp: str | None = None) -> int:
+        q = "SELECT COUNT(*) FROM measurements"
+        args = ()
+        if space_fp is not None:
+            q += " WHERE space=?"
+            args = (space_fp,)
+        with self._lock:
+            return int(self._conn.execute(q, args).fetchone()[0])
+
+    def clear(self, space_fp: str | None = None):
+        with self._lock:
+            if space_fp is None:
+                self._conn.execute("DELETE FROM measurements")
+            else:
+                self._conn.execute(
+                    "DELETE FROM measurements WHERE space=?", (space_fp,))
+            self._conn.commit()
+
+    def close(self):
+        with self._lock:
+            self._conn.close()

@@ -44,28 +44,40 @@ def _light(counters: dict) -> dict:
 
 def construct_mfs(engine, space: SearchSpace, point: dict, kind: str,
                   counters: dict | None = None) -> MFS:
-    """Paper §5.2: per-factor necessity testing with others held fixed."""
+    """Paper §5.2: per-factor necessity testing with others held fixed.
+
+    All per-factor probes are independent (each varies one factor against
+    the fixed witness), so they are submitted as a single concurrent
+    ``measure_batch``; the triggering sets are then assembled from the
+    results in deterministic factor/value order.
+    """
+    from . import batching
+
     point = space.normalize(point)
-    conditions = {}
-    n_tests = 0
+    triggering = {f: {point[f]} for f in space.factors}
+    probes = []                                  # (factor, value, probe point)
     for f, dom in space.factors.items():
         if len(dom) < 2:
             continue
-        triggering = {point[f]}
         for v in dom:
             if v == point[f]:
                 continue
             q = space.normalize({**point, f: v})
             if q == point:                       # inert factor for this cell
-                triggering.add(v)
+                triggering[f].add(v)
                 continue
             if not space.valid(q):
                 continue                         # untestable: not claimed
-            m = engine.measure(q)
-            n_tests += 1
-            if m is not None and kind in anomaly_mod.kinds(m, q.get("remat",
-                                                                    "none")):
-                triggering.add(v)
-        if set(triggering) != set(dom):
-            conditions[f] = tuple(sorted(triggering, key=str))
-    return MFS(kind, conditions, dict(point), _light(counters), n_tests)
+            probes.append((f, v, q))
+    results = batching.measure_batch(engine, [q for _, _, q in probes])
+    for (f, v, q), m in zip(probes, results):
+        if m is not None and kind in anomaly_mod.kinds(m, q.get("remat",
+                                                                "none")):
+            triggering[f].add(v)
+    conditions = {}
+    for f, dom in space.factors.items():
+        if len(dom) < 2:
+            continue
+        if set(triggering[f]) != set(dom):
+            conditions[f] = tuple(sorted(triggering[f], key=str))
+    return MFS(kind, conditions, dict(point), _light(counters), len(probes))

@@ -1,4 +1,4 @@
-"""Algorithm 1: simulated-annealing counter-guided anomaly search.
+"""Algorithm 1: simulated-annealing counter-guided anomaly search (batched).
 
 Faithful to the paper: energy deltas (B-A)/A for performance counters
 (minimized) and (A-B)/B for diagnostic counters (maximized); relaxed
@@ -6,6 +6,19 @@ temperature schedule; MFS-match skipping (line 5); random restart after each
 new anomaly (line 17).  ``mfs_skip``/``mfs_construct`` toggles give the
 paper's Fig.5 ablations (SA-without-MFS); the events list lets benchmarks
 credit ground-truth anomalies by timestamp (the paper's Fig.4 metric).
+
+Batching: each temperature step generates its ``n_per_t`` mutation proposals
+up front, measures them as one ``Engine.measure_batch`` (concurrent compile,
+deduplicated), then applies acceptance/anomaly handling *sequentially in
+proposal order*.  All RNG draws happen in the single driver thread, and the
+engine charges budget at submission in list order, so the trajectory —
+events, anomalies, accounting — is identical for any ``n_workers``.
+Proposals that fall inside an MFS constructed earlier in the same batch are
+dropped at processing time, preserving the paper's line-5 skip invariant.
+
+Budget is counted in engine *attempts* (unique points requested, including
+failed compiles — see engine.py), so infeasible-heavy regions can no longer
+inflate the effective budget.
 """
 from __future__ import annotations
 
@@ -16,6 +29,7 @@ import time
 from typing import Any
 
 from . import anomaly as anomaly_mod
+from . import batching
 from .mfs import MFS, construct_mfs, match_any
 from .searchspace import SearchSpace
 
@@ -23,7 +37,7 @@ from .searchspace import SearchSpace
 @dataclasses.dataclass
 class Event:
     t: float
-    n_compiles: int
+    n_spent: int                 # budget (engine attempts) at event time
     point: dict
     kinds: frozenset
     counter_value: float | None
@@ -36,8 +50,9 @@ class SearchResult:
     counter: str
     events: list
     anomalies: list
-    n_compiles: int
+    n_attempts: int              # budget spent (unique points requested)
     wall_s: float
+    stats: dict | None = None    # engine counter snapshot (cache hits, ...)
 
 
 def _counter_value(m, counter):
@@ -66,23 +81,32 @@ def simulated_annealing(engine, space: SearchSpace, counter: str,
     S: list[MFS] = anomaly_set if anomaly_set is not None else []
     events: list[Event] = []
     start = time.time()
-    start_compiles = engine.n_compiles
+    start_spent = batching.spent(engine)
 
     def spent():
-        return engine.n_compiles - start_compiles
+        return batching.spent(engine) - start_spent
 
-    def record(point, m, new_mfs=None):
+    def result(label="collie-sa"):
+        return SearchResult(label, counter, events, S, spent(),
+                            time.time() - start,
+                            batching.engine_stats(engine))
+
+    def record(point, m, new_mfs=None, at=None):
         k = anomaly_mod.kinds(m, point.get("remat", "none")) if m else frozenset()
-        events.append(Event(time.time() - start, spent(), dict(point), k,
-                            _counter_value(m, counter), new_mfs))
+        events.append(Event(time.time() - start,
+                            spent() if at is None else at - start_spent,
+                            dict(point), k, _counter_value(m, counter),
+                            new_mfs))
         return k
 
     def random_measured():
+        """First feasible random point (serial: restarts are rare and a
+        wider speculative batch here just burns budget)."""
         for _ in range(50):
             p = space.random_point(rng)
             if mfs_skip and match_any(S, p):
                 continue
-            m = engine.measure(p)
+            m = batching.measure_batch(engine, [p])[0]
             if m is not None:
                 return p, m
         return None, None
@@ -109,48 +133,114 @@ def simulated_annealing(engine, space: SearchSpace, counter: str,
 
     p_old, m_old = random_measured()
     if p_old is None:
-        return SearchResult("collie-sa", counter, events, S, spent(),
-                            time.time() - start)
+        return result()
     k = record(p_old, m_old)
     handle_anomaly(p_old, m_old, k)
 
     t = t0
     stall = 0
-    while spent() < budget_compiles and time.time() - start < budget_s:
-        for _ in range(n_per_t):
-            if spent() >= budget_compiles:
-                break
-            p_new = space.mutate(p_old, rng)
-            if mfs_skip and match_any(S, p_new):
-                continue
-            m_new = engine.measure(p_new)
-            if m_new is None:
-                continue
-            stall += 1
-            if stall > 4 * n_per_t / alpha:      # hard stall: jump out
-                stall = 0
-                p_r, m_r = random_measured()
-                if p_r is not None:
-                    p_old, m_old = p_r, m_r
-            kinds = record(p_new, m_new)
-            de = _delta_e(_counter_value(m_old, counter),
-                          _counter_value(m_new, counter), mode)
-            if de < 0 or rng.random() < math.exp(-de / max(t, 1e-9)):
-                p_old, m_old = p_new, m_new
-                if de < 0:
-                    stall = 0
-            if handle_anomaly(p_new, m_new, kinds):
-                p_old, m_old = random_measured()
-                if p_old is None:
+    exhausted = False
+    reject_hist: list[int] = []    # recent Metropolis outcomes (1 = reject)
+    while not exhausted and spent() < budget_compiles \
+            and time.time() - start < budget_s:
+        # ---- propose this temperature step's batch as speculative mutation
+        # chains (p1 = mutate(base), p2 = mutate(p1), ...), all rooted at the
+        # incumbent.  Chain DEPTH adapts to the recent reject rate: while SA
+        # accepts nearly everything (hot phase, plateau laterals) one deep
+        # chain reproduces the serial algorithm's compounded walk; when cold
+        # phases reject most moves, depth shrinks toward 1 and the batch
+        # becomes independent retries from the incumbent — the serial
+        # algorithm's reject-and-retry patience.  All RNG draws stay in the
+        # driver thread, so trajectories are identical for any n_workers.
+        recent = reject_hist[-32:]
+        rej = sum(recent) / max(len(recent), 1)
+        depth = max(1, min(n_per_t, round(0.5 / max(rej, 0.0625))))
+        n_prop = min(n_per_t, max(budget_compiles - spent(), 1))
+        flat: list = []            # all proposals, measured as one batch
+        chains: list = []          # chains of indices into flat
+        guard = 0
+        while len(flat) < n_prop and guard < 4 * n_per_t:
+            base = p_old
+            chain = []
+            while len(chain) < depth and len(flat) < n_prop:
+                q = None
+                while guard < 4 * n_per_t:
+                    guard += 1
+                    cand = space.mutate(base, rng)
+                    if mfs_skip and match_any(S, cand):
+                        continue
+                    q = cand
                     break
+                if q is None:
+                    break
+                chain.append(len(flat))
+                flat.append(q)
+                base = q
+            if not chain:
+                break
+            chains.append(chain)
+        if not flat:                   # neighborhood fully inside known MFSes
+            p_old, m_old = random_measured()
+            if p_old is None:
+                break
+            continue
+        results, spents = batching.measure_batch_spent(engine, flat)
+        # ---- deterministic sequential acceptance.  Every measured proposal
+        # is recorded and anomaly-checked; acceptance follows each chain only
+        # while its speculation holds — a reject / infeasible point kills the
+        # rest of that chain as move candidates, and a RESTART (hard stall or
+        # new anomaly) kills every remaining chain in the batch: they were
+        # all rooted at a base the serial algorithm would no longer be at.
+        restarted = False
+        for chain in chains:
+            if exhausted:
+                break
+            chain_live = not restarted
+            for i in chain:
+                p_new, m_new = flat[i], results[i]
+                if mfs_skip and match_any(S, p_new):
+                    chain_live = False  # MFS constructed earlier in this batch
+                    continue
+                if m_new is None:
+                    chain_live = False
+                    continue
+                stall += 1
+                if stall > 4 * n_per_t / alpha:      # hard stall: jump out
+                    stall = 0
+                    p_r, m_r = random_measured()
+                    if p_r is not None:
+                        p_old, m_old = p_r, m_r
+                        chain_live = False
+                        restarted = True
+                kinds = record(p_new, m_new, at=spents[i])
+                if chain_live:
+                    de = _delta_e(_counter_value(m_old, counter),
+                                  _counter_value(m_new, counter), mode)
+                    accepted = de < 0 or rng.random() < math.exp(
+                        -de / max(t, 1e-9))
+                    reject_hist.append(0 if accepted else 1)
+                    if len(reject_hist) > 256:
+                        del reject_hist[:224]
+                    if accepted:
+                        p_old, m_old = p_new, m_new
+                        if de < 0:
+                            stall = 0
+                    else:
+                        chain_live = False
+                if handle_anomaly(p_new, m_new, kinds):
+                    p_old, m_old = random_measured()
+                    if p_old is None:
+                        exhausted = True
+                        break
+                    chain_live = False
+                    restarted = True
         t *= alpha
         if t < t_min:
             # paper §5.1: "a more relaxed temperature ... enables the
             # algorithm to jump out of a certain stage even when it has
             # already run lots of iterations" -> re-anneal instead of stop
             t = t0
-    return SearchResult("collie-sa", counter, events, S, spent(),
-                        time.time() - start)
+    return result()
 
 
 def rank_counters(engine, space: SearchSpace, names: list, seed: int = 0,
@@ -158,9 +248,8 @@ def rank_counters(engine, space: SearchSpace, names: list, seed: int = 0,
     """Paper §7.2: rank counters by sigma/mu over random probe points."""
     rng = random.Random(seed)
     vals = {c: [] for c in names}
-    for _ in range(n_probe):
-        p = space.random_point(rng)
-        m = engine.measure(p)
+    probes = [space.random_point(rng) for _ in range(n_probe)]
+    for m in batching.measure_batch(engine, probes):
         if m is None:
             continue
         for c in names:
@@ -185,22 +274,23 @@ def campaign(engine, space: SearchSpace, counters_cfg: list, seed: int = 0,
     S: list[MFS] = []
     all_events = []
     start = time.time()
-    start_c = engine.n_compiles
+    start_c = batching.spent(engine)
     share = max(budget_compiles // max(len(counters_cfg), 1), 1)
     for counter, mode in counters_cfg:
-        left = budget_compiles - (engine.n_compiles - start_c)
+        left = budget_compiles - (batching.spent(engine) - start_c)
         if left <= 0:
             break
-        c_off = engine.n_compiles - start_c
+        c_off = batching.spent(engine) - start_c
         t_off = time.time() - start
         r = simulated_annealing(
             engine, space, counter, mode, seed=seed,
             budget_compiles=min(share, left), mfs_skip=mfs_skip,
             mfs_construct=mfs_construct, anomaly_set=S)
         for e in r.events:
-            e.n_compiles += c_off
+            e.n_spent += c_off
             e.t += t_off
             all_events.append(e)
         seed += 1
     return SearchResult(label, "campaign", all_events, S,
-                        engine.n_compiles - start_c, time.time() - start)
+                        batching.spent(engine) - start_c,
+                        time.time() - start, batching.engine_stats(engine))

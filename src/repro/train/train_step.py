@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig, RunPolicy
+from ..launch.mesh import shard_map
 from ..models import api
 from .optimizer import OptConfig, init_opt_state, opt_update
 from . import compression
@@ -104,7 +105,7 @@ def make_train_step(cfg: ModelConfig, policy: RunPolicy, opt: OptConfig,
         ef_in = jax.tree.map(lambda _: P("pod"), ef) if ef is not None else P()
         # partial-manual shard_map: only "pod" is manual (we own its
         # collective and its wire format); data/model stay under SPMD.
-        body = jax.shard_map(
+        body = shard_map(
             pod_body, mesh=mesh,
             in_specs=(p_spec, _batch_specs(batch), ef_in),
             out_specs=(P(), P(), jax.tree.map(lambda _: P(), params),

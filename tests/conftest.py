@@ -6,3 +6,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # NOTE: no XLA_FLAGS here on purpose — tests see the real single CPU device.
 # Multi-device behaviour is exercised via subprocesses (test_multidevice.py)
 # and the dry-run driver, which own their device counts.
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running end-to-end test (real compiles)")

@@ -1,0 +1,60 @@
+"""Capture compiled-module HLO fixtures + analyzer ground truth.
+
+Run from the repo root (regenerates tests/fixtures/*.hlo.gz and
+expected_hlo_analysis.json):
+
+    PYTHONPATH=src python tests/fixtures/capture_fixtures.py
+
+The expected JSON is produced by whatever analyzer is current at capture
+time; the parity test then pins future analyzer rewrites to these outputs
+byte-for-byte.
+"""
+import gzip
+import json
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=32")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+CELLS = [
+    # (fixture name, arch, shape, point overrides)
+    ("train", "qwen2-1.5b", "train_s", {"remat": "dots", "n_microbatch": 2,
+                                        "preset": "fsdp"}),
+    ("prefill", "mixtral-8x7b", "prefill_s", {"preset": "ep"}),
+    ("decode", "qwen2-1.5b", "decode_s", {"preset": "tp"}),
+]
+
+
+def main():
+    from repro.core.benchscale import BENCH_SHAPES, bench_archs, bench_meshes
+    from repro.core.searchspace import SearchSpace
+    from repro.launch import hloanalysis
+    from repro.launch.steps import build_cell
+    from repro.train.optimizer import OptConfig
+
+    space = SearchSpace(bench_archs(["qwen2-1.5b", "mixtral-8x7b"]),
+                        BENCH_SHAPES)
+    meshes = bench_meshes()
+    expected = {}
+    for name, arch, shape_name, overrides in CELLS:
+        base = {k: v[0] for k, v in space.factors.items()}
+        point = space.normalize({**base, "arch": arch, "shape": shape_name,
+                                 "mesh": "single", **overrides})
+        cfg, shape, policy, mesh_kind = space.to_run(point)
+        cell = build_cell(cfg, shape, policy, meshes[mesh_kind],
+                          OptConfig(name=policy.optimizer))
+        text = cell.lower().compile().as_text()
+        with gzip.open(os.path.join(HERE, f"{name}.hlo.gz"), "wt") as f:
+            f.write(text)
+        expected[name] = hloanalysis.analyze(text)
+        print(f"{name}: {len(text.splitlines())} HLO lines, "
+              f"flops={expected[name]['flops']:.3g}")
+    with open(os.path.join(HERE, "expected_hlo_analysis.json"), "w") as f:
+        json.dump(expected, f, indent=1, sort_keys=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Deterministic fallback for `hypothesis` when it is not installed.
+
+The container bakes its dependency set; hypothesis may be absent.  This shim
+implements the tiny strategy subset the test-suite uses (integers, floats,
+sampled_from, permutations, composite, numpy arrays) and runs each ``@given``
+test over seeded pseudo-random examples, so the property tests still exercise
+the code instead of erroring at collection.  With hypothesis installed the
+test modules import the real library and this file is inert.
+"""
+from __future__ import annotations
+
+import random
+
+import numpy as np
+
+_SEED = 0xC0111E
+
+
+class Strategy:
+    def __init__(self, fn):
+        self._fn = fn
+
+    def example(self, rng: random.Random):
+        return self._fn(rng)
+
+
+def integers(min_value, max_value):
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value, max_value, width=64, **_):
+    return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return Strategy(lambda rng: rng.choice(seq))
+
+
+def permutations(seq):
+    seq = list(seq)
+
+    def draw(rng):
+        out = list(seq)
+        rng.shuffle(out)
+        return out
+    return Strategy(draw)
+
+
+def composite(fn):
+    def build(*args, **kwargs):
+        def draw_example(rng):
+            def draw(strategy):
+                return strategy.example(rng)
+            return fn(draw, *args, **kwargs)
+        return Strategy(draw_example)
+    return build
+
+
+class _St:
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    sampled_from = staticmethod(sampled_from)
+    permutations = staticmethod(permutations)
+    composite = staticmethod(composite)
+
+
+st = _St()
+
+
+def _np_dtype_example(dtype, shape, elements, rng):
+    if isinstance(shape, Strategy):
+        shape = shape.example(rng)
+    if isinstance(shape, int):
+        shape = (shape,)
+    n = 1
+    for d in shape:
+        n *= d
+    if elements is not None:
+        flat = [elements.example(rng) for _ in range(n)]
+    else:
+        flat = [rng.uniform(-1, 1) for _ in range(n)]
+    return np.asarray(flat, dtype=dtype).reshape(shape)
+
+
+def _arrays(dtype, shape, elements=None, **_):
+    return Strategy(lambda rng: _np_dtype_example(dtype, shape, elements, rng))
+
+
+class _Hnp:
+    arrays = staticmethod(_arrays)
+
+
+hnp = _Hnp()
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    def deco(fn):
+        inner = getattr(fn, "__wrapped_given__", None)
+        (inner or fn).__max_examples__ = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    """Map strategies onto the test's trailing params; leading params stay
+    in the wrapper signature so pytest still injects them as fixtures."""
+    def deco(fn):
+        import inspect
+        params = list(inspect.signature(fn).parameters.values())
+        fixture_params = params[:len(params) - len(strategies)]
+
+        def wrapper(*args, **kwargs):
+            n = getattr(fn, "__max_examples__", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(_SEED)
+            for _ in range(n):
+                vals = [s.example(rng) for s in strategies]
+                fn(*args, *vals, **kwargs)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__wrapped_given__ = fn
+        wrapper.__signature__ = inspect.Signature(fixture_params)
+        return wrapper
+    return deco

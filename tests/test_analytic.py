@@ -1,12 +1,12 @@
 """Sanity of the analytic cost model ("the spec")."""
 import pytest
-from jax.sharding import AbstractMesh
+from repro.launch.mesh import make_abstract_mesh
 
 from repro.configs.base import SHAPES, RunPolicy, get_config
 from repro.core import analytic
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = make_abstract_mesh((16, 16), ("data", "model"))
+MESH3 = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_model_flops_train_is_6nd():

@@ -136,8 +136,9 @@ def test_compression_error_feedback_unbiased():
             red, ef2 = reduce_grads({"g": g[0]}, {"g": ef[0]}, "int8", "pod")
             return red["g"], ef2["g"][None]
 
-        f = jax.shard_map(body, mesh=mesh, in_specs=(P("pod"), P("pod")),
-                          out_specs=(P(), P("pod")), check_vma=False)
+        from repro.launch.mesh import shard_map
+        f = shard_map(body, mesh=mesh, in_specs=(P("pod"), P("pod")),
+                      out_specs=(P(), P("pod")), check_vma=False)
         true_mean = g_global.mean(axis=0)
         ef = jnp.zeros((4, 64))
         acc = jnp.zeros((64,))

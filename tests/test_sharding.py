@@ -1,14 +1,19 @@
 """Sharding-rule resolution with hypothesis property tests (AbstractMesh —
 no devices needed for spec resolution)."""
 import jax
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_abstract_mesh
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # container lacks hypothesis: seeded fallback
+    from hypstub import given, settings, st
 
 from repro.launch.sharding import PRESETS, make_rules, spec_for
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = make_abstract_mesh((16, 16), ("data", "model"))
+MESH3 = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_divisible_dim_shards():

@@ -7,10 +7,13 @@ Prints one CSV summary line per benchmark: name,status,wall_s,paper_analogue
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run --only bench_search
   FAST=1 PYTHONPATH=src python -m benchmarks.run     # reduced budgets
+  PYTHONPATH=src python -m benchmarks.run --compare  # bench_fidelity smoke
+                                                     # vs committed baseline
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import subprocess
 import sys
@@ -22,6 +25,7 @@ BENCHES = [
     # (script, paper analogue, env, devices)
     ("bench_roofline.py", "roofline table (deliverable g)", {}, 512),
     ("bench_search.py", "Fig.4 search efficiency + Fig.5 ablations", {}, 32),
+    ("bench_fidelity.py", "multi-fidelity prescreen vs full (ISSUE 2)", {}, 32),
     ("bench_counter_trace.py", "Fig.6 counter trace", {}, 32),
     ("bench_anomaly_table.py", "Table 2 production catalog", {}, 512),
     ("bench_perf_iter.py", "Perf hillclimb validation", {}, 512),
@@ -30,6 +34,7 @@ BENCHES = [
 
 FAST_ENV = {
     "bench_search.py": {"GT_BUDGET": "70", "RUN_BUDGET": "25"},
+    "bench_fidelity.py": {"SMOKE": "1"},
     "bench_counter_trace.py": {"TRACE_BUDGET": "22"},
     "bench_anomaly_table.py": {"CATALOG_BUDGET": "45"},
     "bench_engine_throughput.py": {"SMOKE": "1"},
@@ -56,10 +61,66 @@ def run_bench(script: str, extra_env: dict, devices: int,
     return p.returncode, wall
 
 
+def compare(update_baseline: bool) -> int:
+    """Smoke-run bench_fidelity and gate on the committed baseline JSON.
+
+    Fails (rc 1) on >20% regression of prescreen compiles-per-anomaly or on
+    finding fewer ground-truth anomaly kinds than the baseline recorded.
+    ``--update-baseline`` rewrites the baseline from the fresh run instead.
+    """
+    rc, wall = run_bench("bench_fidelity.py", {"SMOKE": "1"}, 32)
+    if rc != 0:
+        print(f"compare,ERROR,bench_fidelity failed rc={rc}")
+        return 1
+    res_path = os.path.join(HERE, "results", "bench_fidelity_smoke.json")
+    base_path = os.path.join(HERE, "results", "bench_fidelity_baseline.json")
+    with open(res_path) as f:
+        res = json.load(f)
+    cur = res["summary"]["prescreen"]
+    if update_baseline:
+        if cur["compiles_per_anomaly"] is None:
+            # a no-anomaly smoke run would bake in a null baseline and
+            # permanently disable the regression gate — refuse
+            print("compare,ERROR,refusing to baseline a run that found no "
+                  "anomalies", file=sys.stderr)
+            return 1
+        with open(base_path, "w") as f:
+            json.dump({"compiles_per_anomaly": cur["compiles_per_anomaly"],
+                       "n_found": cur["n_found"],
+                       "kinds_found": cur["kinds_found"],
+                       "budget": res["budget"],
+                       "gt_budget": res["gt_budget"],
+                       "archs": res["archs"]}, f, indent=1)
+        print(f"compare,updated-baseline,{wall:.0f},"
+              f"cpa={cur['compiles_per_anomaly']:.1f}")
+        return 0
+    with open(base_path) as f:
+        base = json.load(f)
+    cpa, base_cpa = cur["compiles_per_anomaly"], base["compiles_per_anomaly"]
+    fail = []
+    if cpa is None or (base_cpa and cpa > 1.2 * base_cpa):
+        fail.append(f"compiles_per_anomaly {cpa} vs baseline {base_cpa} "
+                    f"(>20% regression)")
+    if not set(base.get("kinds_found", [])) <= set(cur["kinds_found"]):
+        fail.append(f"kinds_found {cur['kinds_found']} lost baseline kinds "
+                    f"{base['kinds_found']}")
+    status = "FAIL" if fail else "ok"
+    print(f"compare,{status},{wall:.0f},cpa={cpa} baseline={base_cpa}")
+    for msg in fail:
+        print(f"compare,FAIL,{msg}", file=sys.stderr)
+    return 1 if fail else 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--compare", action="store_true",
+                    help="smoke-run bench_fidelity, gate vs committed baseline")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="with --compare: rewrite the committed baseline")
     args = ap.parse_args()
+    if args.compare:
+        sys.exit(compare(args.update_baseline))
     failures = 0
     summary = []
     for script, analogue, env, devices in BENCHES:

@@ -16,35 +16,73 @@ helpers keep the drivers agnostic:
 from __future__ import annotations
 
 
-def measure_batch(engine, points: list) -> list:
+def _kwargs_of(fn) -> frozenset:
+    import inspect
+    try:
+        return frozenset(inspect.signature(fn).parameters)
+    except (TypeError, ValueError):        # uninspectable callable
+        return frozenset()
+
+
+def measure_batch(engine, points: list, **kw) -> list:
     mb = getattr(engine, "measure_batch", None)
     if mb is not None:
-        return mb(points)
+        accepted = _kwargs_of(mb)
+        return mb(points, **{k: v for k, v in kw.items() if k in accepted})
     return [engine.measure(p) for p in points]
 
 
-def measure_batch_spent(engine, points: list) -> tuple:
+def measure_batch_spent(engine, points: list, **kw) -> tuple:
     """-> (results, budget-spent as of each point's submission).
 
     The per-point spent values keep event crediting ("anomaly found after N
     attempts") exact under batching — a hit on the first proposal of an
     8-wide batch is credited at its own submission count, not the batch's.
+
+    Extra kwargs (``prescreen``, ``score``) are forwarded when the engine's
+    measure_batch accepts them and silently dropped otherwise, so synthetic
+    single-fidelity engines keep working.
     """
     mb = getattr(engine, "measure_batch", None)
     if mb is not None:
-        import inspect
-        try:
-            accepts = "with_spent" in inspect.signature(mb).parameters
-        except (TypeError, ValueError):    # uninspectable callable
-            accepts = False
-        if accepts:
-            return mb(points, with_spent=True)
-        return mb(points), [spent(engine)] * len(points)
+        accepted = _kwargs_of(mb)
+        kw = {k: v for k, v in kw.items() if k in accepted}
+        if "with_spent" in accepted:
+            return mb(points, with_spent=True, **kw)
+        return mb(points, **kw), [spent(engine)] * len(points)
     results, spents = [], []
     for p in points:
         results.append(engine.measure(p))
         spents.append(spent(engine))
     return results, spents
+
+
+def predict_batch(engine, points: list) -> list:
+    """Fidelity-0 estimates aligned with ``points`` — [None]*n for engines
+    without a surrogate (prediction-free engines degrade to full fidelity)."""
+    pb = getattr(engine, "predict_batch", None)
+    if pb is not None:
+        return pb(points)
+    return [None] * len(points)
+
+
+def note_prescreen(engine, n_promoted: int, n_screened: int):
+    """Report a driver-side prescreen decision to the engine's stats (no-op
+    for engines without the hook)."""
+    hook = getattr(engine, "note_prescreen", None)
+    if hook is not None:
+        hook(n_promoted, n_screened)
+
+
+def prediction_value(pred, counter: str, mode: str):
+    """Sort key for ranking proposals by a predicted counter: lower is
+    more-promising.  None predictions rank last."""
+    if pred is None:
+        return (1, 0.0)
+    v = pred.get(counter)
+    if v is None:
+        return (1, 0.0)
+    return (0, float(v) if mode == "min" else -float(v))
 
 
 def spent(engine) -> int:

@@ -1,28 +1,39 @@
-"""The workload engine (paper §4 "Workload engine" + §6), concurrent.
+"""The workload engine (paper §4 "Workload engine" + §6), multi-fidelity.
 
 Translates a search-space point into a concrete compiled workload on the
 production mesh and returns its counters.  Compilation failures / invalid
 settings are reported as None (the search skips them), mirroring the paper's
 engine rejecting unsatisfiable verb combinations.
 
-Throughput layers (this is the search hot path — see ISSUE 1):
+Throughput layers (this is the search hot path — see ISSUE 1/2):
 
-* ``measure_batch(points)`` measures a proposal batch on a thread pool (XLA
-  compilation happens in C++ and can overlap); duplicate points within a
-  batch or already in flight are measured once, with waiters sharing the
-  result.
+* ``measure_batch(points)`` measures a proposal batch on a persistent thread
+  pool (XLA compilation happens in C++ and can overlap); duplicate points
+  within a batch or already in flight are measured once, with waiters
+  sharing the result.
 * A thread-safe in-memory cache keyed by the *normalized* point serves
   repeats for free, and an optional persistent cross-campaign cache
   (``measure_cache.MeasureCache``; ``COLLIE_CACHE`` env var) warm-starts
   whole benchmark runs — previously measured points (including known compile
-  failures) are never recompiled.
+  failures) are never recompiled.  Batch writes flush as one transaction.
+* **Fidelity tiers**: ``predict_batch(points)`` returns compile-free
+  fidelity-0 counter estimates (``surrogate.Surrogate``; uncharged), and
+  ``measure_batch(..., prescreen=k)`` ranks a proposal batch by predicted
+  anomaly score and promotes only the top-k to a full compile — budget is
+  charged only for promoted points; screened-out positions return None.
+  ``COLLIE_PRESCREEN`` sets a process-wide default k.  Every completed real
+  measurement feeds the surrogate's residual calibrator (in submission list
+  order, so calibrated predictions are deterministic for any n_workers).
 
 Budget accounting: ``n_attempts`` is the budget currency — it charges once
-per *unique* point requested, whether the compile succeeds, fails, or is
-served from cache.  Failed compiles therefore consume search budget (they
-previously did not, silently inflating SA/MFS budgets on infeasible-heavy
-regions), and warm-cache runs follow byte-identical search trajectories to
-cold runs.  ``n_compiles`` counts only successful compiles.
+per *unique promoted* point, whether the compile succeeds, fails, or is
+served from cache.  Failed compiles therefore consume search budget, and
+warm-cache runs follow byte-identical search trajectories to cold runs.
+``n_compiles`` counts only successful compiles.
+
+Engine-returned counter dicts are always flat ``perf.*``/``diag.*`` maps —
+identical whether served cold, from memory, or from disk; callers that need
+the full :class:`~repro.core.counters.Measurement` use ``measure_full``.
 """
 from __future__ import annotations
 
@@ -37,18 +48,28 @@ from ..launch.steps import build_cell
 from . import counters as counters_mod
 from .measure_cache import MeasureCache, space_fingerprint
 from .searchspace import SearchSpace
+from .surrogate import Calibrator, Surrogate
 
 
 class Engine:
     def __init__(self, space: SearchSpace, meshes: dict, cache: bool = True,
                  verbose: bool = False, n_workers: int | None = None,
-                 persistent_cache=None):
+                 persistent_cache=None, surrogate=None,
+                 prescreen: int | None = None, calibrator_path=None):
         """meshes: {"single": Mesh, "multi": Mesh} (multi optional).
 
         n_workers: thread-pool width for measure_batch (default: the
         COLLIE_WORKERS env var, else 1 — serial).
         persistent_cache: a MeasureCache, a path, or None (default: the
         COLLIE_CACHE env var if set).  Pass False to force-disable.
+        surrogate: a Surrogate, None (build one from space+meshes), or False
+        to disable fidelity-0 prediction/prescreening.
+        prescreen: default top-k for measure_batch prescreening (None: the
+        COLLIE_PRESCREEN env var, else 0 — off).
+        calibrator_path: JSON file persisting the surrogate's residual
+        calibrator across engines (None: COLLIE_CALIB env var — "1" rides
+        alongside the persistent cache as <cache>.calib.json; a path uses
+        that path; unset/"0" keeps calibration in-memory only).
         """
         self.space = space
         self.meshes = meshes
@@ -72,31 +93,157 @@ class Engine:
         self.persistent = persistent_cache
         self.space_fp = (space_fingerprint(space, meshes)
                          if self.persistent is not None else None)
+        if prescreen is None:
+            raw = os.environ.get("COLLIE_PRESCREEN", "0") or "0"
+            try:
+                prescreen = int(raw)
+            except ValueError:
+                raise ValueError(
+                    f"COLLIE_PRESCREEN must be an integer, got {raw!r}")
+        self.prescreen = max(int(prescreen), 0)
+        if surrogate is None:
+            surrogate = Surrogate(space, meshes)
+        self.surrogate = surrogate or None
+        self._calib_path = self._resolve_calib_path(calibrator_path)
+        if self.surrogate is not None and self._calib_path:
+            self.surrogate.calibrator.load(self._calib_path)
         self._lock = threading.RLock()
+        self._pool = None              # persistent executor (lazy; close())
         self._inflight: dict = {}      # point key -> Future
         self._charged: set = set()     # unique keys that consumed budget
+        self._observed: set = set()    # unique keys fed to the calibrator
+        self._meas: dict = {}          # key -> Measurement (measure_full)
         self.n_attempts = 0        # budget: unique points requested
         self.n_compiles = 0        # successful compiles
         self.n_failures = 0        # failed compile attempts
         self.n_cache_hits = 0      # in-memory / in-flight hits (incl. repeats)
         self.n_disk_hits = 0       # persistent-cache hits
         self.n_cache_misses = 0    # requests that had to compile
+        self.n_predictions = 0     # fidelity-0 predictions served
+        self.n_promoted = 0        # prescreened points promoted to compile
+        self.n_screened_out = 0    # prescreened points never compiled
         self.compile_time = 0.0
+
+    def _resolve_calib_path(self, calibrator_path):
+        if calibrator_path is None:
+            calibrator_path = os.environ.get("COLLIE_CALIB")
+        if not calibrator_path or calibrator_path == "0":
+            return None
+        if calibrator_path == "1":
+            if self.persistent is None:
+                return None
+            return self.persistent.path + ".calib.json"
+        return os.fspath(calibrator_path)
+
+    # ------------------------------------------------------------ lifecycle
+    def close(self):
+        """Shut down the persistent thread pool, flush calibrator state."""
+        with self._lock:
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
+        if self.surrogate is not None and self._calib_path:
+            try:
+                self.surrogate.calibrator.save(self._calib_path)
+            except OSError:
+                pass
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    def _executor(self) -> ThreadPoolExecutor:
+        with self._lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self.n_workers,
+                    thread_name_prefix="collie-engine")
+            return self._pool
+
+    # ------------------------------------------------------------- fidelity 0
+    def predict(self, point: dict):
+        """Fidelity-0 estimate of a point's counters — no compile, no budget.
+
+        Returns a calibrated flat ``perf.*``/``diag.*`` dict (estimates, not
+        measurements) or None where the full engine would reject the point.
+        """
+        if self.surrogate is None:
+            return None
+        with self._lock:
+            self.n_predictions += 1
+        return self.surrogate.predict(point)
+
+    def predict_batch(self, points: list) -> list:
+        """Fidelity-0 estimates aligned with ``points`` (uncharged)."""
+        return [self.predict(p) for p in points]
+
+    def note_prescreen(self, n_promoted: int, n_screened: int):
+        """Fold a *driver-side* prescreen decision (SA chain selection, BO
+        pool trimming, MFS short-circuits) into the promotion stats, so
+        ``stats()`` reflects every fidelity-0 screening regardless of where
+        the decision was made."""
+        with self._lock:
+            self.n_promoted += int(n_promoted)
+            self.n_screened_out += int(n_screened)
+
+    def _observe(self, key, point, result):
+        """Fold a completed real measurement into the residual calibrator —
+        called in submission list order from the driver thread, once per
+        unique key, so calibration state is n_workers-independent."""
+        if self.surrogate is None or result is None:
+            return
+        with self._lock:
+            if key in self._observed:
+                return
+            self._observed.add(key)
+        self.surrogate.observe(point, result)
 
     # ------------------------------------------------------------- measure
     def measure(self, point: dict):
         """Point -> flat counter dict (perf + diag) or None if infeasible."""
         key = self.space.point_key(point)
-        return self._measure_key(key, point)
+        result = self._measure_key(key, point)
+        self._observe(key, point, result)
+        return result
+
+    def measure_full(self, point: dict):
+        """Point -> full :class:`Measurement` (or None if infeasible).
+
+        ``measure``/``measure_batch`` return flat counter dicts only; this
+        keeps the compiled-artifact handle for callers that need HLO text,
+        memory analysis, etc.  Served from the in-memory store when the point
+        was compiled by this engine; a disk-cache hit has no Measurement, so
+        this recompiles once (counted in n_compiles) to rebuild it.
+        """
+        key = self.space.point_key(point)
+        if self.measure(point) is None:
+            return None
+        with self._lock:
+            m = self._meas.get(key)
+        if m is None:
+            _, m = self._compile(point)
+            if m is not None:
+                with self._lock:
+                    self._meas[key] = m
+        return m
 
     def measure_batch(self, points: list, n_workers: int | None = None,
-                      with_spent: bool = False):
-        """Measure a batch of points, deduplicated, on a thread pool.
+                      with_spent: bool = False, prescreen: int | None = None,
+                      score=None):
+        """Measure a batch of points, deduplicated, on the thread pool.
 
         Returns counter dicts (or None) aligned with ``points``.  Budget is
-        charged for every unique point at submission, in list order, so
-        accounting — and therefore any search driven by it — is identical
+        charged for every unique promoted point at submission, in list order,
+        so accounting — and therefore any search driven by it — is identical
         for any n_workers (including 1).
+
+        prescreen=k (None: the engine default; 0: off): rank the batch's
+        unique points by fidelity-0 ``score`` (default: predicted anomaly
+        score) and promote only the top-k to a full measurement.  Screened
+        positions return None and are NOT charged.  ``score`` is called as
+        ``score(pred, point) -> float`` with the calibrated prediction.
 
         with_spent=True additionally returns the n_attempts total as of each
         point's submission, so event crediting ("found after N attempts")
@@ -104,17 +251,72 @@ class Engine:
         """
         nw = self.n_workers if n_workers is None else max(int(n_workers), 1)
         keys = [self.space.point_key(p) for p in points]
+        k = self.prescreen if prescreen is None else max(int(prescreen), 0)
+        promoted_keys = self._prescreen_keys(keys, points, k, score)
+        promoted = [i for i, kk in enumerate(keys) if kk in promoted_keys] \
+            if promoted_keys is not None else range(len(points))
         spents = []
         with self._lock:
-            for k in keys:
-                self._charge(k)
+            pset = set(promoted)
+            for i, kk in enumerate(keys):
+                if i in pset:
+                    self._charge(kk)
                 spents.append(self.n_attempts)
-        if nw <= 1 or len(points) <= 1:
-            results = [self._measure_key(k, p) for k, p in zip(keys, points)]
-        else:
-            with ThreadPoolExecutor(max_workers=nw) as ex:
-                results = list(ex.map(self._measure_key, keys, points))
+        results: list = [None] * len(points)
+        todo = [(keys[i], points[i], i) for i in promoted]
+        write_buf: list = [] if self.persistent is not None else None
+        try:
+            if nw <= 1 or len(todo) <= 1:
+                for kk, p, i in todo:
+                    results[i] = self._measure_key(kk, p, write_buf)
+            elif nw != self.n_workers:
+                # one-off width override: a temporary pool preserves
+                # semantics
+                with ThreadPoolExecutor(max_workers=nw) as ex:
+                    outs = list(ex.map(lambda t: self._measure_key(
+                        t[0], t[1], write_buf), todo))
+                for (_, _, i), r in zip(todo, outs):
+                    results[i] = r
+            else:
+                outs = list(self._executor().map(
+                    lambda t: self._measure_key(t[0], t[1], write_buf),
+                    todo))
+                for (_, _, i), r in zip(todo, outs):
+                    results[i] = r
+        finally:
+            # flush even when a worker raised mid-batch — completed compiles
+            # are seconds of XLA work each and must reach the disk cache
+            if write_buf:
+                self.persistent.put_many(self.space_fp, write_buf)
+        for kk, p, i in todo:        # calibrate in list order (deterministic)
+            self._observe(kk, p, results[i])
         return (results, spents) if with_spent else results
+
+    def _prescreen_keys(self, keys, points, k, score):
+        """-> set of promoted keys, or None for 'promote everything'."""
+        if k <= 0 or self.surrogate is None:
+            return None
+        uniq: dict = {}                       # key -> (first index, point)
+        for i, (kk, p) in enumerate(zip(keys, points)):
+            if kk not in uniq:
+                uniq[kk] = (i, p)
+        if len(uniq) <= k:
+            return None
+        scored = []
+        for kk, (i, p) in uniq.items():
+            pred = self.predict(p)
+            if score is not None:
+                s = score(pred, p)
+            else:
+                s = self.surrogate.anomaly_score(
+                    pred, p.get("remat", "none"))
+            scored.append((-float(s), i, kk))
+        scored.sort()
+        keep = {kk for _, _, kk in scored[:k]}
+        with self._lock:
+            self.n_promoted += len(keep)
+            self.n_screened_out += len(uniq) - len(keep)
+        return keep
 
     # ------------------------------------------------------------ internals
     def _charge(self, key):
@@ -122,7 +324,7 @@ class Engine:
             self._charged.add(key)
             self.n_attempts += 1
 
-    def _measure_key(self, key, point):
+    def _measure_key(self, key, point, write_buf=None):
         with self._lock:
             self._charge(key)
             if self.cache is not None and key in self.cache:
@@ -144,19 +346,24 @@ class Engine:
                              if self.persistent is not None
                              else (False, None))
             if not found:
-                result = self._compile(point)
+                result, meas = self._compile(point)
         except BaseException as e:         # never strand waiters
             with self._lock:
                 self._inflight.pop(key, None)
             mine.set_exception(e)
             raise
         if not found and self.persistent is not None:
-            self.persistent.put(self.space_fp, key, result)
+            if write_buf is not None:      # batched: one txn per batch
+                write_buf.append((key, result))
+            else:
+                self.persistent.put(self.space_fp, key, result)
         with self._lock:
             if found:
                 self.n_disk_hits += 1
             else:
                 self.n_cache_misses += 1
+                if self.cache is not None and meas is not None:
+                    self._meas[key] = meas
             if self.cache is not None:
                 self.cache[key] = result
             self._inflight.pop(key, None)
@@ -164,7 +371,8 @@ class Engine:
         return result
 
     def _compile(self, point):
-        result = None
+        """-> (flat counter dict or None, Measurement or None)."""
+        result, m = None, None
         if self.space.valid(point):
             cfg, shape, policy, mesh_kind = self.space.to_run(point)
             mesh = self.meshes.get(mesh_kind)
@@ -178,15 +386,14 @@ class Engine:
                         self.n_compiles += 1
                         self.compile_time += time.time() - t0
                     result = {**{f"perf.{k}": v for k, v in m.perf.items()},
-                              **{f"diag.{k}": v for k, v in m.diag.items()},
-                              "_measurement": m}
+                              **{f"diag.{k}": v for k, v in m.diag.items()}}
                 except Exception as e:          # sharding/compile failure
                     with self._lock:
                         self.n_failures += 1
                     if self.verbose:
                         print(f"[engine] compile failed: {e}")
-                    result = None
-        return result
+                    result, m = None, None
+        return result, m
 
     # --------------------------------------------------------------- stats
     def stats(self) -> dict:
@@ -204,6 +411,12 @@ class Engine:
                 "cache_hit_rate": hits / total if total else 0.0,
                 "compile_time": self.compile_time,
                 "n_workers": self.n_workers,
+                "n_predictions": self.n_predictions,
+                "n_promoted": self.n_promoted,
+                "n_screened_out": self.n_screened_out,
+                "n_calibrated":
+                    (self.surrogate.calibrator.n_observed
+                     if self.surrogate is not None else 0),
             }
 
     def counter_names(self, sample_point) -> dict:

@@ -103,16 +103,30 @@ class MeasureCache:
             return False, None
         return True, (None if row[0] is None else json.loads(row[0]))
 
-    def put(self, space_fp: str, key, counters: dict | None):
+    @staticmethod
+    def _encode(key, counters):
         if counters is not None:
             counters = {k: _jsonable(v) for k, v in counters.items()
                         if not k.startswith("_")}
         val = None if counters is None else json.dumps(counters)
-        k = point_key_str(key)
+        return point_key_str(key), val
+
+    def put(self, space_fp: str, key, counters: dict | None):
+        self.put_many(space_fp, [(key, counters)])
+
+    def put_many(self, space_fp: str, items):
+        """Write many (key, counters-or-None) pairs in ONE transaction.
+
+        The engine buffers a whole ``measure_batch`` and flushes it here, so
+        a 64-point batch costs one commit instead of 64 (satellite: per-point
+        ``put`` opened and committed a transaction each call)."""
+        rows = [(space_fp, *self._encode(key, counters), time.time())
+                for key, counters in items]
+        if not rows:
+            return
         with self._lock:
-            self._conn.execute(
-                "INSERT OR REPLACE INTO measurements VALUES (?,?,?,?)",
-                (space_fp, k, val, time.time()))
+            self._conn.executemany(
+                "INSERT OR REPLACE INTO measurements VALUES (?,?,?,?)", rows)
             self._conn.commit()
 
     def size(self, space_fp: str | None = None) -> int:

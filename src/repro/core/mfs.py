@@ -43,19 +43,35 @@ def _light(counters: dict) -> dict:
 
 
 def construct_mfs(engine, space: SearchSpace, point: dict, kind: str,
-                  counters: dict | None = None) -> MFS:
+                  counters: dict | None = None,
+                  fidelity: str = "full",
+                  max_probes: int | None = None) -> MFS:
     """Paper §5.2: per-factor necessity testing with others held fixed.
 
     All per-factor probes are independent (each varies one factor against
     the fixed witness), so they are submitted as a single concurrent
     ``measure_batch``; the triggering sets are then assembled from the
-    results in deterministic factor/value order.
+    results in deterministic factor/value order.  Necessity probes must all
+    be measured at full fidelity — the batch pins ``prescreen=0`` so an
+    engine-wide ``COLLIE_PRESCREEN`` default can never silently drop probes
+    and corrupt triggering sets.
+
+    ``fidelity="prescreen"`` (ISSUE 2) spends fewer compiles: probe values
+    whose ``to_run`` mapping is *identical* to the witness's are provably
+    inert (same policy, same mesh, same compiled program) and short-circuit
+    to triggering without a measurement, and the remaining probes are
+    ranked by surrogate-predicted informativeness on the kind's driving
+    counter.  When the caller passes its remaining budget as ``max_probes``,
+    only the most-informative probes are measured (unmeasured values are
+    conservatively left out of the triggering sets) — budget-exhausted
+    constructions lose the least information.
     """
     from . import batching
 
     point = space.normalize(point)
     triggering = {f: {point[f]} for f in space.factors}
     probes = []                                  # (factor, value, probe point)
+    witness_run = space.to_run(point) if fidelity == "prescreen" else None
     for f, dom in space.factors.items():
         if len(dom) < 2:
             continue
@@ -68,8 +84,32 @@ def construct_mfs(engine, space: SearchSpace, point: dict, kind: str,
                 continue
             if not space.valid(q):
                 continue                         # untestable: not claimed
+            if witness_run is not None and space.to_run(q) == witness_run:
+                triggering[f].add(v)             # proven inert: same program
+                batching.note_prescreen(engine, 0, 1)
+                continue
             probes.append((f, v, q))
-    results = batching.measure_batch(engine, [q for _, _, q in probes])
+    if fidelity == "prescreen" and len(probes) > 1:
+        from .surrogate import KIND_COUNTER
+        drv, drv_mode = KIND_COUNTER.get(kind, (None, "max"))
+        if drv is not None:
+            preds = batching.predict_batch(engine, [q for _, _, q in probes])
+            ref = batching.predict_batch(engine, [point])[0]
+            ref_v = (ref or {}).get(drv)
+
+            def info(i):
+                v = (preds[i] or {}).get(drv)
+                if v is None or ref_v is None:
+                    return 0.0
+                return abs(float(v) - float(ref_v))
+            probes = [probes[i] for i in
+                      sorted(range(len(probes)), key=lambda i: (-info(i), i))]
+        if max_probes is not None and len(probes) > max(int(max_probes), 1):
+            kept = max(int(max_probes), 1)
+            batching.note_prescreen(engine, kept, len(probes) - kept)
+            probes = probes[:kept]
+    results = batching.measure_batch(engine, [q for _, _, q in probes],
+                                     prescreen=0)
     for (f, v, q), m in zip(probes, results):
         if m is not None and kind in anomaly_mod.kinds(m, q.get("remat",
                                                                 "none")):

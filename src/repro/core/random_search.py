@@ -3,6 +3,12 @@
 Candidates are drawn in fixed-size pools and measured as one concurrent
 batch; events/anomalies are then processed sequentially in draw order, so
 results are independent of the engine's ``n_workers``.
+
+``fidelity="prescreen"`` (ISSUE 2) draws an ``overprovision``× larger pool
+and lets the engine's fidelity-0 prescreen promote only the
+surrogate-most-anomalous ``pool`` candidates to a full compile — the same
+budget now fuzzes a much wider slice of the space.  ``fidelity="full"`` is
+the PR-1 baseline, byte-for-byte.
 """
 from __future__ import annotations
 
@@ -19,8 +25,12 @@ from .searchspace import SearchSpace
 def random_search(engine, space: SearchSpace, seed: int = 0,
                   budget_compiles: int = 200, budget_s: float = 1e9,
                   mfs_skip: bool = False, mfs_construct: bool = False,
-                  pool: int = 8, label: str = "random") -> SearchResult:
+                  pool: int = 8, label: str = "random",
+                  fidelity: str = "full",
+                  overprovision: int = 4) -> SearchResult:
     rng = random.Random(seed)
+    prescreen = fidelity == "prescreen"
+    over = max(int(overprovision), 1) if prescreen else 1
     S: list[MFS] = []
     events: list[Event] = []
     start = time.time()
@@ -33,8 +43,8 @@ def random_search(engine, space: SearchSpace, seed: int = 0,
     while spent() < budget_compiles and time.time() - start < budget_s:
         n_cand = min(pool, max(budget_compiles - spent(), 1))
         cands = []
-        for _ in range(8 * pool):
-            if len(cands) >= n_cand:
+        for _ in range(8 * pool * over):
+            if len(cands) >= n_cand * over:
                 break
             p = space.random_point(rng)
             if mfs_skip and match_any(S, p):
@@ -48,7 +58,8 @@ def random_search(engine, space: SearchSpace, seed: int = 0,
                 break
             continue
         empty_rounds = 0
-        results, spents = batching.measure_batch_spent(engine, cands)
+        results, spents = batching.measure_batch_spent(
+            engine, cands, prescreen=n_cand if prescreen else 0)
         for p, m, sp in zip(cands, results, spents):
             if mfs_skip and match_any(S, p):
                 continue                   # MFS added earlier in this batch
@@ -62,7 +73,10 @@ def random_search(engine, space: SearchSpace, seed: int = 0,
                     if any(mf.kind == kind and mf.matches(p) for mf in S):
                         continue
                     if mfs_construct:
-                        mf = construct_mfs(engine, space, p, kind, m)
+                        mf = construct_mfs(
+                            engine, space, p, kind, m, fidelity=fidelity,
+                            max_probes=(max(budget_compiles - spent(), 1)
+                                        if prescreen else None))
                     else:
                         mf = MFS(kind, {f: (p[f],) for f in space.factors},
                                  dict(p))

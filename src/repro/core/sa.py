@@ -19,6 +19,17 @@ dropped at processing time, preserving the paper's line-5 skip invariant.
 Budget is counted in engine *attempts* (unique points requested, including
 failed compiles — see engine.py), so infeasible-heavy regions can no longer
 inflate the effective budget.
+
+Multi-fidelity (ISSUE 2): ``fidelity="prescreen"`` over-provisions each
+temperature step with ``overprovision``× more mutation chains, ranks them by
+the *surrogate-predicted* target counter (compile-free; see surrogate.py)
+and promotes only the best chains to full measurement — budget is charged
+only for promoted points, so one budget unit now screens ``overprovision``
+candidates.  All predictions and promotion decisions happen in the driver
+thread on deterministic calibrator state, so prescreened trajectories remain
+identical for any ``n_workers``.  ``fidelity="full"`` (the default) takes
+the exact PR-1 code path, byte-for-byte — the paper-faithful ablations
+survive unchanged.
 """
 from __future__ import annotations
 
@@ -76,8 +87,12 @@ def simulated_annealing(engine, space: SearchSpace, counter: str,
                         t_min: float = 0.02, alpha: float = 0.85,
                         n_per_t: int = 8, mfs_skip: bool = True,
                         mfs_construct: bool = True,
-                        anomaly_set: list | None = None) -> SearchResult:
+                        anomaly_set: list | None = None,
+                        fidelity: str = "full",
+                        overprovision: int = 4) -> SearchResult:
     rng = random.Random(seed)
+    prescreen = fidelity == "prescreen"
+    over = max(int(overprovision), 1) if prescreen else 1
     S: list[MFS] = anomaly_set if anomaly_set is not None else []
     events: list[Event] = []
     start = time.time()
@@ -101,14 +116,30 @@ def simulated_annealing(engine, space: SearchSpace, counter: str,
 
     def random_measured():
         """First feasible random point (serial: restarts are rare and a
-        wider speculative batch here just burns budget)."""
+        wider speculative batch here just burns budget).  Prescreen fidelity
+        draws ``overprovision`` candidates per try and measures the
+        surrogate-most-anomalous first — restarts land in predicted-hot
+        regions without extra budget."""
         for _ in range(50):
-            p = space.random_point(rng)
-            if mfs_skip and match_any(S, p):
+            cands = []
+            for _ in range(over):
+                p = space.random_point(rng)
+                if mfs_skip and match_any(S, p):
+                    continue
+                cands.append(p)
+            if not cands:
                 continue
-            m = batching.measure_batch(engine, [p])[0]
+            if prescreen and len(cands) > 1:
+                preds = batching.predict_batch(engine, cands)
+                order = sorted(
+                    range(len(cands)),
+                    key=lambda i: batching.prediction_value(
+                        preds[i], counter, mode))
+                batching.note_prescreen(engine, 1, len(cands) - 1)
+                cands = [cands[order[0]]]
+            m = batching.measure_batch(engine, [cands[0]], prescreen=0)[0]
             if m is not None:
-                return p, m
+                return cands[0], m
         return None, None
 
     def handle_anomaly(p, m, kinds):
@@ -122,7 +153,10 @@ def simulated_annealing(engine, space: SearchSpace, counter: str,
             if any(mf.kind == kind and mf.matches(p) for mf in S):
                 continue
             if mfs_construct:
-                mf = construct_mfs(engine, space, p, kind, m)
+                mf = construct_mfs(
+                    engine, space, p, kind, m, fidelity=fidelity,
+                    max_probes=(max(budget_compiles - spent(), 1)
+                                if prescreen else None))
             else:
                 mf = MFS(kind, {f: (p[f],) for f in space.factors}, dict(p))
             S.append(mf)
@@ -156,15 +190,16 @@ def simulated_annealing(engine, space: SearchSpace, counter: str,
         rej = sum(recent) / max(len(recent), 1)
         depth = max(1, min(n_per_t, round(0.5 / max(rej, 0.0625))))
         n_prop = min(n_per_t, max(budget_compiles - spent(), 1))
+        n_gen = n_prop * over          # overprovisioned in prescreen fidelity
         flat: list = []            # all proposals, measured as one batch
         chains: list = []          # chains of indices into flat
         guard = 0
-        while len(flat) < n_prop and guard < 4 * n_per_t:
+        while len(flat) < n_gen and guard < 4 * n_per_t * over:
             base = p_old
             chain = []
-            while len(chain) < depth and len(flat) < n_prop:
+            while len(chain) < depth and len(flat) < n_gen:
                 q = None
-                while guard < 4 * n_per_t:
+                while guard < 4 * n_per_t * over:
                     guard += 1
                     cand = space.mutate(base, rng)
                     if mfs_skip and match_any(S, cand):
@@ -184,7 +219,36 @@ def simulated_annealing(engine, space: SearchSpace, counter: str,
             if p_old is None:
                 break
             continue
-        results, spents = batching.measure_batch_spent(engine, flat)
+        if prescreen and len(flat) > n_prop:
+            # ---- fidelity-0 prescreen (driver thread, deterministic): rank
+            # whole chains by their best-predicted element on the target
+            # counter and promote chains until n_prop proposals are funded.
+            # Chain granularity keeps the speculative-acceptance semantics —
+            # a promoted proposal's prefix is always promoted with it.
+            preds = batching.predict_batch(engine, flat)
+            ranked = sorted(
+                range(len(chains)),
+                key=lambda ci: (min(batching.prediction_value(
+                    preds[i], counter, mode) for i in chains[ci]), ci))
+            new_flat, new_chains = [], []
+            for ci in ranked:
+                if len(new_flat) >= n_prop:
+                    break
+                chain = []
+                for i in chains[ci]:
+                    if len(new_flat) >= n_prop:
+                        break
+                    chain.append(len(new_flat))
+                    new_flat.append(flat[i])
+                if chain:
+                    new_chains.append(chain)
+            batching.note_prescreen(engine, len(new_flat),
+                                    len(flat) - len(new_flat))
+            flat, chains = new_flat, new_chains
+        # promoted proposals are always measured in full — prescreen=0 keeps
+        # an engine-wide COLLIE_PRESCREEN default from double-screening
+        results, spents = batching.measure_batch_spent(engine, flat,
+                                                       prescreen=0)
         # ---- deterministic sequential acceptance.  Every measured proposal
         # is recorded and anomaly-checked; acceptance follows each chain only
         # while its speculation holds — a reject / infeasible point kills the
@@ -249,7 +313,7 @@ def rank_counters(engine, space: SearchSpace, names: list, seed: int = 0,
     rng = random.Random(seed)
     vals = {c: [] for c in names}
     probes = [space.random_point(rng) for _ in range(n_probe)]
-    for m in batching.measure_batch(engine, probes):
+    for m in batching.measure_batch(engine, probes, prescreen=0):
         if m is None:
             continue
         for c in names:
@@ -268,7 +332,8 @@ def rank_counters(engine, space: SearchSpace, names: list, seed: int = 0,
 
 def campaign(engine, space: SearchSpace, counters_cfg: list, seed: int = 0,
              budget_compiles: int = 300, mfs_skip=True, mfs_construct=True,
-             label: str = "collie") -> SearchResult:
+             label: str = "collie", fidelity: str = "full",
+             overprovision: int = 4) -> SearchResult:
     """Optimize each (counter, mode) in ranked order, sharing the anomaly set
     and budget — the paper's end-to-end Collie run."""
     S: list[MFS] = []
@@ -285,7 +350,8 @@ def campaign(engine, space: SearchSpace, counters_cfg: list, seed: int = 0,
         r = simulated_annealing(
             engine, space, counter, mode, seed=seed,
             budget_compiles=min(share, left), mfs_skip=mfs_skip,
-            mfs_construct=mfs_construct, anomaly_set=S)
+            mfs_construct=mfs_construct, anomaly_set=S,
+            fidelity=fidelity, overprovision=overprovision)
         for e in r.events:
             e.n_spent += c_off
             e.t += t_off

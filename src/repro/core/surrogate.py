@@ -1,0 +1,491 @@
+"""Fidelity-0 measurement: a compile-free analytic surrogate (ISSUE 2).
+
+Collie's search cost is dominated by jit-lower + XLA-compile per candidate.
+This module predicts the anomaly-indicative counters of a search-space point
+*without* touching a mesh entry or lowering anything: it reuses the
+first-principles floors in ``analytic.py`` and layers a static sharding-aware
+traffic model on top — the known ways a ``RunPolicy`` makes a compiled
+program *exceed* its floor (replication under ``dp``, unsharded
+vocab/sequence/cache gathers, remat recompute, full-square ``plain``
+attention, MoE capacity padding).  Search drivers use it to screen wide and
+compile narrow (``Engine.predict_batch`` / ``measure_batch(prescreen=k)``).
+
+Predictions are *estimates*; an online residual :class:`Calibrator` fits a
+per-counter scale/offset correction from every real measurement the engine
+completes, so the ranking sharpens as a campaign runs.  Mesh information is
+reduced to static axis-shape descriptors at construction, so a Surrogate
+works anywhere — including processes without the bench device count.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import threading
+
+from .. import hw
+from . import analytic
+from . import anomaly as anomaly_mod
+
+# counters the surrogate screens (predicts well enough to rank by)
+SCREENED = (
+    "perf.roofline_efficiency",
+    "perf.useful_flops_ratio",
+    "diag.collective_blowup",
+    "diag.memory_overshoot",
+    "diag.hbm_oversubscribed",
+    "diag.collective_wire_bytes",
+    "diag.peak_bytes",
+    "diag.transpose_bytes",
+    "diag.n_allgather",
+    "diag.n_allreduce",
+    "diag.n_alltoall",
+    "diag.n_permute",
+)
+
+# the counter that drives each anomaly kind (used by MFS probe ordering)
+KIND_COUNTER = {
+    "A1": ("perf.roofline_efficiency", "min"),
+    "A2": ("diag.collective_blowup", "max"),
+    "A3": ("perf.useful_flops_ratio", "min"),
+    "A4": ("diag.hbm_oversubscribed", "max"),
+}
+
+
+class _MeshDesc:
+    """Static stand-in for a Mesh: just axis sizes (what analytic.py reads)."""
+
+    def __init__(self, shape: dict):
+        self.shape = dict(shape)
+        n = 1
+        for v in self.shape.values():
+            n *= int(v)
+        self.size = n
+
+
+def mesh_descs(meshes: dict) -> dict:
+    """Extract {kind: _MeshDesc} from real Meshes, shape dicts, or stubs."""
+    descs = {}
+    for kind, m in (meshes or {}).items():
+        if m is None:
+            continue
+        if isinstance(m, _MeshDesc):
+            descs[kind] = m
+        elif isinstance(m, dict):
+            descs[kind] = _MeshDesc(m)
+        else:
+            try:
+                descs[kind] = _MeshDesc(dict(m.shape))
+            except Exception:      # test stubs without .shape: 1-device mesh
+                descs[kind] = _MeshDesc({})
+    return descs
+
+
+# --------------------------------------------------------------- calibrator
+
+class Calibrator:
+    """Online per-counter scale/offset residual fit, in log1p space:
+    log1p(y) ≈ a·log1p(x) + b, i.e. a power-law scale + offset correction.
+
+    Screened counters are non-negative and heavy-tailed (collective counts
+    span four orders of magnitude); a linear-space least-squares fit lets a
+    few large points ruin the median correction, while the log-space fit is
+    robust and keeps corrected values non-negative.  Keeps running
+    least-squares sums per counter; corrections kick in after ``min_obs``
+    observations and are refreshed on every observation.  Updates are
+    commutative sums folded in driver-thread list order by the engine, so
+    calibrated predictions — and any prescreen ranking derived from them —
+    are deterministic for any ``n_workers``.
+    """
+
+    def __init__(self, min_obs: int = 8):
+        self.min_obs = min_obs
+        self._lock = threading.Lock()
+        self._sums: dict = {}    # counter -> [n, sx, sy, sxx, sxy] (log1p)
+
+    @staticmethod
+    def _t(v: float) -> float:
+        return math.log1p(max(float(v), 0.0))
+
+    def observe(self, pred: dict, actual: dict):
+        if not pred or not actual:
+            return
+        with self._lock:
+            for c in SCREENED:
+                x, y = pred.get(c), actual.get(c)
+                if x is None or y is None:
+                    continue
+                x, y = float(x), float(y)
+                if not (math.isfinite(x) and math.isfinite(y)):
+                    continue
+                x, y = self._t(x), self._t(y)
+                s = self._sums.setdefault(c, [0, 0.0, 0.0, 0.0, 0.0])
+                s[0] += 1
+                s[1] += x
+                s[2] += y
+                s[3] += x * x
+                s[4] += x * y
+
+    def coeffs(self, counter: str):
+        """-> log-space (a, b) or None while under-observed / degenerate."""
+        with self._lock:
+            s = self._sums.get(counter)
+            if s is None or s[0] < self.min_obs:
+                return None
+            n, sx, sy, sxx, sxy = s
+        var = sxx - sx * sx / n
+        if var <= 1e-12 * max(sxx, 1.0):
+            return (1.0, (sy - sx) / n)          # offset-only correction
+        a = (sxy - sx * sy / n) / var
+        return (a, (sy - a * sx) / n)
+
+    def apply(self, pred: dict) -> dict:
+        if pred is None:
+            return None
+        out = dict(pred)
+        for c in SCREENED:
+            if c not in out:
+                continue
+            ab = self.coeffs(c)
+            if ab is not None:
+                t = ab[0] * self._t(out[c]) + ab[1]
+                out[c] = math.expm1(min(max(t, 0.0), 700.0))
+        return out
+
+    @property
+    def n_observed(self) -> int:
+        with self._lock:
+            return max((s[0] for s in self._sums.values()), default=0)
+
+    # ----------------------------------------------------------- persistence
+    def state(self) -> dict:
+        with self._lock:
+            return {"min_obs": self.min_obs,
+                    "sums": {c: list(s) for c, s in self._sums.items()}}
+
+    def load_state(self, state: dict):
+        with self._lock:
+            self.min_obs = int(state.get("min_obs", self.min_obs))
+            self._sums = {c: list(s) for c, s in state.get("sums", {}).items()}
+
+    def save(self, path: str):
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.state(), f)
+        os.replace(tmp, path)
+
+    def load(self, path: str) -> bool:
+        try:
+            with open(path) as f:
+                self.load_state(json.load(f))
+            return True
+        except (OSError, ValueError):
+            return False
+
+
+# ---------------------------------------------------------------- surrogate
+
+class Surrogate:
+    """Point -> estimated flat counter dict, no compile (fidelity 0)."""
+
+    def __init__(self, space, meshes: dict, chip: hw.ChipSpec = hw.V5E,
+                 calibrator: Calibrator | None = None):
+        self.space = space
+        self.descs = mesh_descs(meshes)
+        self.chip = chip
+        self.calibrator = calibrator or Calibrator()
+        self._cache: dict = {}
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------- predict
+    def predict(self, point: dict, calibrated: bool = True):
+        """Estimated counters (or None if the engine would reject it)."""
+        key = self.space.point_key(point)
+        with self._lock:
+            raw = self._cache.get(key, False)
+        if raw is False:
+            raw = self._estimate(point)
+            with self._lock:
+                if len(self._cache) > 65536:    # campaign-scale bound
+                    self._cache.clear()
+                self._cache[key] = raw
+        if raw is None:
+            return None
+        return self.calibrator.apply(raw) if calibrated else dict(raw)
+
+    def observe(self, point: dict, actual: dict):
+        """Feed one completed real measurement into the residual fit."""
+        if actual is None:
+            return
+        raw = self.predict(point, calibrated=False)
+        if raw is not None:
+            self.calibrator.observe(raw, actual)
+
+    def anomaly_score(self, pred: dict, remat: str = "none") -> float:
+        """How far past the nearest anomaly threshold this point is predicted
+        to land (>1: predicted anomalous).  The engine's default prescreen
+        rank."""
+        if pred is None:
+            return -1.0
+        eps = 1e-9
+        a3 = anomaly_mod.A3_USEFUL_MIN.get(remat, 0.55)
+        return max(
+            anomaly_mod.A1_EFFICIENCY_MIN
+            / max(pred.get("perf.roofline_efficiency", 1.0), eps),
+            pred.get("diag.collective_blowup", 0.0)
+            / anomaly_mod.A2_COLLECTIVE_MAX,
+            a3 / max(pred.get("perf.useful_flops_ratio", 1.0), eps),
+            pred.get("diag.hbm_oversubscribed", 0.0) / anomaly_mod.A4_HBM_MAX,
+        )
+
+    # ------------------------------------------------- the traffic model
+    def _estimate(self, point: dict):
+        """The static sharding-aware model.
+
+        Structure over precision: each counter is the analytic floor scaled
+        by multiplicative penalty factors for the policy pathologies XLA is
+        known to compile in (microbatch loop unrolling, remat recompute,
+        unsharded optimizer state, f32 master-copy traffic, capacity
+        padding, replication under ``dp``, per-rule gathers).  The residual
+        calibrator owns absolute scale; what must be right here is the
+        *direction and relative size* of each factor's effect — that is what
+        prescreen ranking consumes.
+        """
+        space = self.space
+        if not space.valid(point):
+            return None
+        cfg, shape, policy, mesh_kind = space.to_run(point)
+        mesh = self.descs.get(mesh_kind)
+        if mesh is None:
+            return None
+        chip = self.chip
+        floors = analytic.step_floor_seconds(cfg, shape, policy, mesh, chip)
+
+        n_m = mesh.shape.get("model", 1)
+        n_d = analytic._axis_size(mesh, ("pod", "data"))
+        multi = mesh.shape.get("pod", 1) > 1
+        train = shape.kind == "train"
+        adtype = 2 if policy.dtype == "bf16" else 4
+        passes = 3.0 if train else 1.0
+        tokens = (shape.global_batch if shape.kind == "decode"
+                  else shape.global_batch * shape.seq_len)
+        tokens_local = max(tokens / max(n_d, 1), 1.0)
+        layers = cfg.n_layers
+        preset = policy.sharding_preset
+        unsharded = {a for a, rules in policy.rule_overrides if rules == ()}
+        n_micro = max(policy.n_microbatch, 1) if train else 1
+        moe = bool(cfg.n_experts)
+
+        # shared train-pathology intensity: how much extra program XLA emits
+        # around each layer (microbatch unrolling, remat recompute, optimizer
+        # update traffic, f32 master-copy round-trips)
+        intensity = 1.0
+        if train:
+            intensity *= n_micro
+            intensity *= {"none": 1.0, "dots": 2.8, "full": 2.4}[policy.remat]
+            intensity *= {"adamw": 1.0, "adafactor": 2.2,
+                          "sgdm": 2.4}[policy.optimizer]
+            if not policy.zero1:
+                intensity *= 2.2
+            if not policy.params_f32:
+                intensity *= 2.4
+
+        # ---- perf.roofline_efficiency: direct factor model of measured
+        # step-bound / analytic-floor (low = anomalous); coefficients from a
+        # log-space regression over measured bench points
+        eff = 0.8
+        if train:
+            eff *= 0.15
+            eff /= 1.0 + 0.08 * (n_micro - 1)
+            eff *= {"none": 1.0, "dots": 0.74, "full": 0.59}[policy.remat]
+            eff *= {"adamw": 1.0, "adafactor": 0.75, "sgdm": 0.9}[
+                policy.optimizer]
+            if not policy.zero1:
+                eff *= 0.42
+            if not policy.params_f32:
+                eff *= 0.7
+        elif shape.kind == "decode":
+            eff *= 1.6 if shape.seq_len >= 4096 else 1.0
+        else:
+            eff *= 0.5
+        eff *= {"fsdp": 1.0, "tp": 0.55, "ep": 0.4, "dp": 0.4}[preset]
+        if not cfg.attn_free:
+            eff *= {"auto": 1.0, "plain": 0.45, "blocked": 0.55,
+                    "local": 1.0}.get(policy.attn_impl, 1.0)
+        if moe:
+            eff *= 0.35
+            eff *= {1.0: 0.55, 1.25: 0.65, 2.0: 1.0}.get(
+                policy.capacity_factor, 1.0)
+        if multi:
+            eff *= 0.85
+        if "vocab" in unsharded:
+            eff *= 0.7
+        eff *= 0.9 ** len(unsharded - {"vocab"})
+        eff = min(max(eff, 1e-4), 1.0)
+
+        # ---- perf.useful_flops_ratio: model flops / estimated compiled
+        # flops (waste factors; low = anomalous)
+        attn_fl = analytic.attention_flops(cfg, shape)
+        mf_useful = (floors["matmul_model_flops"] + attn_fl
+                     + analytic.recurrence_flops(cfg, shape))
+        waste = 1.15
+        if train:
+            waste *= 1.25 * n_micro ** 0.3 \
+                * {"none": 1.0, "dots": 1.25, "full": 1.45}[policy.remat] \
+                * {"adamw": 1.0, "adafactor": 1.15, "sgdm": 1.2}[
+                    policy.optimizer]
+            if not policy.zero1:
+                waste *= 1.15
+            if not policy.params_f32:
+                waste *= 1.25
+        elif shape.kind == "decode":
+            # decode-loop overhead grows superlinearly with context length
+            waste *= 1.0 + (shape.seq_len / 1000.0) ** 1.3
+        else:
+            waste *= 1.45
+        if moe:
+            waste *= 1.35                           # router/dispatch glue
+        if preset == "dp" and n_m > 1:
+            waste *= math.sqrt(n_m)                 # partial replication
+        total_flops = floors["model_flops"] * waste
+        if policy.attn_impl == "plain" and not cfg.attn_free \
+                and shape.kind != "decode" and not cfg.window:
+            total_flops += attn_fl                  # full square vs causal
+        if moe and policy.capacity_factor > 1.0:
+            total_flops += floors["model_flops"] * 0.55 \
+                * (policy.capacity_factor - 1.0)    # capacity-padded slots
+
+        # ---- wire bytes: parallelism floor + gathers the floor excludes
+        wire = floors["collective_floor"]
+        if n_m > 1:
+            gather = (n_m - 1) / n_m
+            if "vocab" in unsharded and preset != "dp":
+                wire += passes * tokens_local * cfg.vocab_size * adtype \
+                    * gather * 0.5
+            if "seq_q" in unsharded and preset in ("tp", "ep"):
+                wire += passes * layers * tokens_local * cfg.d_model \
+                    * adtype * gather
+            if "cache_seq" in unsharded and shape.kind in ("decode",
+                                                           "prefill"):
+                clen = min(shape.seq_len, cfg.window) if cfg.window \
+                    else shape.seq_len
+                cache = 2 * layers * max(shape.global_batch // max(n_d, 1), 1) \
+                    * clen * max(cfg.n_kv_heads, 1) * cfg.d_head * adtype
+                wire += cache * gather
+        if moe and preset == "ep":
+            wire *= min(policy.capacity_factor, 2.0)
+        wire += 0.02 * floors["bytes_floor"]        # resharding noise
+
+        # ---- peak memory: floor × allocator/layout overhead factors
+        act = analytic.activation_bytes_floor(cfg, shape, policy, mesh)
+        peak = floors["memory_floor"] * 1.45
+        peak *= {"fsdp": 1.45, "tp": 1.7, "ep": 1.35, "dp": 1.0}[preset]
+        if shape.kind == "prefill":
+            peak *= 2.0                             # logits + cache-write bufs
+        if train:
+            peak *= 0.85                            # floor's act term is wide
+            if preset == "fsdp":
+                peak *= 1.15                        # gather buffers
+            elif preset == "tp":
+                peak *= 0.85
+            # the floor scales activations by 1/n_micro but XLA keeps
+            # per-microbatch loop buffers at small counts; at large counts
+            # the loop reuses one buffer and the floor overestimates
+            if n_micro > 1:
+                peak *= 1.4 if n_micro <= 4 else (1.0 if n_micro <= 8
+                                                  else 0.75)
+            peak *= {"adamw": 1.0, "adafactor": 1.0,
+                     "sgdm": 0.7}[policy.optimizer]
+            if not policy.params_f32:
+                peak *= 0.85                        # bf16 param residency
+        if policy.attn_impl == "plain" and not cfg.attn_free:
+            peak *= 1.4                             # unfused score matrices
+        elif policy.attn_impl == "local" and not cfg.attn_free:
+            peak *= 1.15
+        if "rwkv" in cfg.block_pattern:
+            peak *= 0.8                             # floor over-counts state
+        if train and "seq_q" in unsharded and n_m > 1:
+            peak += act / passes * (n_m - 1) * 0.5  # replicated activations
+
+        # transpose/layout thrash: relayouts scale with activation traffic
+        # and bite hardest under tp/ep (column<->row flips per block)
+        thrash = {"tp": 0.30, "ep": 0.25, "fsdp": 0.10, "dp": 0.05}
+        transpose = act * thrash.get(preset, 0.1) \
+            + (0.15 * act if policy.attn_impl == "blocked" else 0.0)
+
+        # ---- collective counts: per-layer schedule × per-counter factor
+        # models (each collective type responds to a different slice of the
+        # policy — a shared "intensity" scalar misranks them)
+        if train:
+            ag = (2 + layers * {"fsdp": 1.5, "ep": 0.8, "tp": 0.4,
+                                "dp": 0.1}[preset]) * intensity
+            for a in ("vocab", "seq_q", "cache_seq"):
+                if a in unsharded and n_m > 1:
+                    ag += 0.3 * layers * intensity
+            # all-reduces follow the full train-intensity stack (every extra
+            # program copy re-reduces its gradients); dp's unsharded
+            # full-gradient reduce makes it the heaviest preset
+            ar = (2 + 0.5 * layers) * intensity \
+                * {"fsdp": 1.0, "tp": 0.9, "ep": 0.8, "dp": 1.3}[preset]
+            # all-to-alls: gradient scatter/transpose lowering (fsdp-heavy,
+            # adafactor-heavy), plus the wkv/rg-lru backward scatter-adds
+            # which regroup token shards under every preset
+            a2a_f = n_micro ** 1.1 \
+                * {"none": 1.0, "dots": 0.7, "full": 0.7}[policy.remat] \
+                * {"adamw": 1.0, "adafactor": 1.2, "sgdm": 0.8}[
+                    policy.optimizer]
+            a2a = 0.3 * layers * a2a_f \
+                * {"fsdp": 1.0, "tp": 0.1, "ep": 0.1, "dp": 0.02}[preset]
+            if moe:
+                # expert routing all-to-alls survive under every preset; the
+                # fsdp gather schedule multiplies them
+                a2a += layers * a2a_f * {"fsdp": 2.5, "tp": 0.08,
+                                         "ep": 0.05, "dp": 0.12}[preset]
+            # the wkv/rg-lru backward scatter-adds regroup token shards, but
+            # only fsdp's gather schedule keeps them as all-to-alls
+            if preset in ("fsdp", "tp") and not moe:
+                if "rwkv" in cfg.block_pattern:
+                    a2a += 0.5 * layers * a2a_f
+                elif "rec" in cfg.block_pattern:
+                    a2a += 0.15 * layers * a2a_f
+            # permutes ride the zero1 reduce-scatter/all-gather rings and the
+            # unrolled microbatch loop (superlinear in n_micro)
+            perm = (1 + 0.3 * layers) * n_micro ** 1.6 \
+                * {"none": 1.0, "dots": 1.9, "full": 1.0}[policy.remat] \
+                * {"adamw": 1.0, "adafactor": 1.6, "sgdm": 1.5}[
+                    policy.optimizer] \
+                * (1.0 if policy.params_f32 else 1.3) \
+                * {"fsdp": 1.0, "tp": 0.37, "ep": 0.39, "dp": 1.0}[preset] \
+                * (1.8 if multi else 1.0)
+        else:
+            ag = 3.0
+            # dp needs no inference collectives at all (pure batch shard)
+            nt_pf = {"fsdp": 1.2, "tp": 1.0, "ep": 1.0, "dp": 0.03}[preset]
+            ar = (20.0 if shape.kind == "decode" else 9.0) * nt_pf
+            # inference MoE routes via gather; only fsdp's cache regroup
+            # emits a single all-to-all
+            a2a = 1.0 if preset == "fsdp" and shape.kind == "decode" else 0.0
+            if shape.kind == "decode" and shape.seq_len >= 4096:
+                # long-context decode loops rotate cache shards
+                perm = {"fsdp": 2.0, "tp": 4.0, "ep": 8.0, "dp": 0.05}[preset]
+            elif shape.kind == "decode":
+                perm = {"fsdp": 1.0, "tp": 0.1, "ep": 0.1, "dp": 0.05}[preset]
+            else:
+                perm = 0.05
+
+        return {
+            "perf.roofline_efficiency": eff,
+            "perf.useful_flops_ratio":
+                mf_useful / max(total_flops, 1.0),
+            "diag.collective_blowup":
+                wire / max(floors["collective_floor"], 16e6),
+            "diag.collective_wire_bytes": wire,
+            "diag.transpose_bytes": transpose,
+            "diag.memory_overshoot": peak / max(floors["memory_floor"], 1.0),
+            "diag.peak_bytes": peak,
+            "diag.hbm_oversubscribed": peak / chip.hbm_bytes,
+            "diag.n_allgather": ag,
+            "diag.n_allreduce": ar,
+            "diag.n_alltoall": a2a,
+            "diag.n_permute": perm,
+        }

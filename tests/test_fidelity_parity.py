@@ -1,0 +1,435 @@
+"""Multi-fidelity invariants (ISSUE 2).
+
+* full-fidelity parity — fidelity="full" trajectories are unchanged by the
+  surrogate machinery (surrogate on/off, any n_workers);
+* prescreen determinism — fidelity="prescreen" trajectories are identical
+  for any n_workers (predictions + promotion decided in the driver thread);
+* budget — screened-out points are never charged, compiled, or returned;
+* result shape — engine counter dicts never carry ``_measurement``, cold ==
+  warm byte-for-byte, ``measure_full`` exposes the Measurement object;
+* satellites — persistent thread pool, batched cache writes, calibrator
+  persistence, MFS probe short-circuit, BO GP factorization parity.
+
+Engine-logic tests stub the compile layer (see test_engine_concurrency) so
+everything here runs in milliseconds.
+"""
+import random
+
+import numpy as np
+import pytest
+
+import repro.core.engine as engine_mod
+from repro.configs.all_archs import smoke_config
+from repro.configs.base import ShapeSpec
+from repro.core import batching
+from repro.core.bo import _GPState, _gp_posterior
+from repro.core.engine import Engine
+from repro.core.measure_cache import MeasureCache
+from repro.core.mfs import construct_mfs
+from repro.core.sa import simulated_annealing
+from repro.core.searchspace import SearchSpace
+
+
+def small_space():
+    archs = {n: smoke_config(n) for n in ["qwen2-1.5b"]}
+    shapes = {"train_s": ShapeSpec("train_s", "train", 64, 8),
+              "decode_s": ShapeSpec("decode_s", "decode", 256, 8)}
+    return SearchSpace(archs, shapes, restrict={
+        "optimizer": ("adamw",), "grad_compress": ("none",),
+        "n_microbatch": (1, 2), "capacity_factor": (1.25,),
+        "attn_impl": ("auto", "plain"), "remat": ("none", "dots")})
+
+
+class _StubMeasurement:
+    def __init__(self, h):
+        self.perf = {"roofline_efficiency": 0.2 + (h % 7) * 0.1,
+                     "useful_flops_ratio": 0.3 + (h % 5) * 0.1}
+        self.diag = {"collective_blowup": 1.0 + (h % 9),
+                     "memory_overshoot": 1.0 + (h % 3),
+                     "hbm_oversubscribed": 0.4}
+
+
+def _stub_compiles(monkeypatch, fail_on=()):
+    """Deterministic point-dependent fake compile layer."""
+    calls = []
+
+    def fake_build_cell(cfg, shape, policy, mesh, opt):
+        return (cfg.name, shape.name, str(policy))
+
+    def fake_measure_cell(cell):
+        calls.append(cell)
+        if cell[1] in fail_on:
+            raise RuntimeError("planted compile failure")
+        return _StubMeasurement(sum(map(ord, "".join(map(str, cell)))))
+
+    monkeypatch.setattr(engine_mod, "build_cell", fake_build_cell)
+    monkeypatch.setattr(engine_mod.counters_mod, "measure_cell",
+                        fake_measure_cell)
+    return calls
+
+
+def _sa_fingerprint(r):
+    return ([(tuple(sorted(e.point.items())), tuple(sorted(e.kinds)),
+              e.counter_value, e.n_spent, e.new_mfs is None)
+             for e in r.events],
+            [(m.kind, tuple(sorted(m.conditions.items())))
+             for m in r.anomalies],
+            r.n_attempts)
+
+
+def _run_sa(space, fidelity, n_workers, surrogate=None):
+    eng = Engine(space, {"single": object()}, n_workers=n_workers,
+                 persistent_cache=False, surrogate=surrogate)
+    r = simulated_annealing(eng, space, "diag.collective_blowup", "max",
+                            seed=5, budget_compiles=30, fidelity=fidelity)
+    eng.close()
+    return _sa_fingerprint(r)
+
+
+# ------------------------------------------------------------------ parity
+def test_full_fidelity_unaffected_by_surrogate(monkeypatch):
+    """fidelity="full" is byte-identical with the surrogate enabled,
+    disabled, and at any n_workers — the PR-1 trajectory survives."""
+    _stub_compiles(monkeypatch)
+    space = small_space()
+    base = _run_sa(space, "full", 1)
+    assert _run_sa(space, "full", 4) == base
+    assert _run_sa(space, "full", 1, surrogate=False) == base
+    assert _run_sa(space, "full", 4, surrogate=False) == base
+
+
+def test_engine_default_prescreen_never_leaks_into_drivers(monkeypatch):
+    """A process-wide COLLIE_PRESCREEN default must not screen SA proposal
+    batches, MFS necessity probes, or counter-ranking probes — those paths
+    pin prescreen=0 (full fidelity stays byte-identical, triggering sets
+    stay complete)."""
+    _stub_compiles(monkeypatch)
+    space = small_space()
+    base = _run_sa(space, "full", 1)
+    monkeypatch.setenv("COLLIE_PRESCREEN", "2")
+    assert _run_sa(space, "full", 1) == base
+    assert _run_sa(space, "full", 4) == base
+    eng = Engine(space, {"single": object()}, persistent_cache=False)
+    assert eng.prescreen == 2
+    p = space.normalize({**space.random_point(random.Random(9)),
+                         "mesh": "single", "shape": "decode_s"})
+    mf = construct_mfs(eng, space, p, "A2", fidelity="full")
+    assert eng.n_attempts == mf.n_tests       # every probe was measured
+    eng.close()
+
+
+def test_mfs_max_probes_truncates_most_informative_first(monkeypatch):
+    _stub_compiles(monkeypatch)
+    space = small_space()
+    eng = Engine(space, {"single": object()}, persistent_cache=False)
+    p = space.normalize({**space.random_point(random.Random(10)),
+                         "mesh": "single"})
+    full = construct_mfs(eng, space, p, "A2", fidelity="prescreen")
+    eng2 = Engine(space, {"single": object()}, persistent_cache=False)
+    capped = construct_mfs(eng2, space, p, "A2", fidelity="prescreen",
+                           max_probes=3)
+    assert capped.n_tests == 3 < full.n_tests
+    assert eng2.n_attempts == 3
+    # unmeasured values are conservatively absent from triggering sets
+    for f, vals in capped.conditions.items():
+        assert p[f] in vals
+    eng.close()
+    eng2.close()
+
+
+def test_prescreen_deterministic_across_workers(monkeypatch):
+    _stub_compiles(monkeypatch)
+    space = small_space()
+    a = _run_sa(space, "prescreen", 1)
+    b = _run_sa(space, "prescreen", 4)
+    assert a == b
+
+
+def test_prescreen_differs_from_full_but_spends_within_budget(monkeypatch):
+    _stub_compiles(monkeypatch)
+    space = small_space()
+    eng = Engine(space, {"single": object()}, persistent_cache=False)
+    r = simulated_annealing(eng, space, "diag.collective_blowup", "max",
+                            seed=5, budget_compiles=30, fidelity="prescreen")
+    s = eng.stats()
+    assert s["n_screened_out"] > 0          # it actually screened something
+    assert s["n_predictions"] > 0
+    assert r.n_attempts >= 1
+    eng.close()
+
+
+# ------------------------------------------------------- engine prescreen
+def test_measure_batch_prescreen_budget_and_alignment(monkeypatch):
+    _stub_compiles(monkeypatch)
+    space = small_space()
+    eng = Engine(space, {"single": object()}, persistent_cache=False)
+    rng = random.Random(1)
+    pts, keys = [], set()
+    while len(pts) < 8:
+        p = {**space.random_point(rng), "mesh": "single"}
+        if space.point_key(p) not in keys:
+            keys.add(space.point_key(p))
+            pts.append(p)
+    results, spents = eng.measure_batch(pts, with_spent=True, prescreen=3)
+    assert len(results) == len(spents) == 8
+    measured = [i for i, m in enumerate(results) if m is not None]
+    assert len(measured) == 3               # top-3 promoted only
+    assert eng.n_attempts == 3              # screened points were never charged
+    s = eng.stats()
+    assert s["n_promoted"] == 3 and s["n_screened_out"] == 5
+    # k >= unique points: everything promoted, nothing screened
+    r2 = eng.measure_batch(pts, prescreen=100)
+    assert all(m is not None for m in r2)
+    assert eng.n_attempts == 8
+
+
+def test_collie_prescreen_env_default(monkeypatch):
+    _stub_compiles(monkeypatch)
+    monkeypatch.setenv("COLLIE_PRESCREEN", "2")
+    space = small_space()
+    eng = Engine(space, {"single": object()}, persistent_cache=False)
+    assert eng.prescreen == 2
+    rng = random.Random(2)
+    pts, keys = [], set()
+    while len(pts) < 6:
+        p = {**space.random_point(rng), "mesh": "single"}
+        if space.point_key(p) not in keys:
+            keys.add(space.point_key(p))
+            pts.append(p)
+    results = eng.measure_batch(pts)        # engine default applies
+    assert sum(m is not None for m in results) == 2
+    monkeypatch.setenv("COLLIE_PRESCREEN", "nope")
+    with pytest.raises(ValueError):
+        Engine(space, {"single": object()}, persistent_cache=False)
+
+
+def test_predict_batch_uncharged(monkeypatch):
+    _stub_compiles(monkeypatch)
+    space = small_space()
+    eng = Engine(space, {"single": object()}, persistent_cache=False)
+    pts = [{**space.random_point(random.Random(3)), "mesh": "single"}
+           for _ in range(4)]
+    preds = eng.predict_batch(pts)
+    assert len(preds) == 4 and all(p is not None for p in preds)
+    assert all("perf.roofline_efficiency" in p for p in preds)
+    assert eng.n_attempts == 0 and eng.n_compiles == 0
+    assert eng.stats()["n_predictions"] == 4
+
+
+# ------------------------------------------------ result-shape invariant
+def test_engine_returns_flat_dicts_cold_memory_and_warm(monkeypatch,
+                                                        tmp_path):
+    _stub_compiles(monkeypatch, fail_on=("decode_s",))
+    space = small_space()
+    path = str(tmp_path / "cache.sqlite")
+    rng = random.Random(4)
+    pts = [{**space.random_point(rng), "mesh": "single"} for _ in range(6)]
+
+    cold = Engine(space, {"single": object()}, persistent_cache=path)
+    cold_results = cold.measure_batch(pts)
+    memory = cold.measure_batch(pts)        # in-memory cache hits
+    warm_eng = Engine(space, {"single": object()}, persistent_cache=path)
+    warm = warm_eng.measure_batch(pts)      # disk hits
+    for c, m, w in zip(cold_results, memory, warm):
+        if c is None:
+            assert m is None and w is None
+            continue
+        assert not any(k.startswith("_") for k in c)
+        assert set(c) == {k for k in c
+                          if k.startswith(("perf.", "diag."))}
+        assert m == c
+        assert w == c                       # cold == memory == warm, flat
+    cold.close()
+    warm_eng.close()
+
+
+def test_measure_full_returns_measurement(monkeypatch):
+    _stub_compiles(monkeypatch)
+    space = small_space()
+    eng = Engine(space, {"single": object()}, persistent_cache=False)
+    p = {**space.random_point(random.Random(5)), "mesh": "single"}
+    flat = eng.measure(p)
+    assert flat is not None and "_measurement" not in flat
+    m = eng.measure_full(p)
+    assert isinstance(m, _StubMeasurement)
+    assert eng.n_compiles == 1              # served from the in-memory store
+    bad = {**p, "mesh": "missing"}
+    assert eng.measure_full(bad) is None
+    eng.close()
+
+
+# --------------------------------------------------------------- satellites
+def test_persistent_pool_reused_and_closed(monkeypatch):
+    _stub_compiles(monkeypatch)
+    space = small_space()
+    eng = Engine(space, {"single": object()}, n_workers=4,
+                 persistent_cache=False)
+    rng = random.Random(6)
+    pts = [{**space.random_point(rng), "mesh": "single"} for _ in range(5)]
+    eng.measure_batch(pts)
+    pool = eng._pool
+    assert pool is not None                 # persistent pool created ...
+    eng.measure_batch([{**space.random_point(rng), "mesh": "single"}
+                       for _ in range(5)])
+    assert eng._pool is pool                # ... and reused across batches
+    # one-off width override must not disturb the persistent pool
+    eng.measure_batch([{**space.random_point(rng), "mesh": "single"}
+                       for _ in range(5)], n_workers=2)
+    assert eng._pool is pool
+    eng.close()
+    assert eng._pool is None
+    eng.close()                             # idempotent
+
+
+def test_put_many_single_call_roundtrip(tmp_path):
+    mc = MeasureCache(str(tmp_path / "mc.sqlite"))
+    items = []
+    for i in range(10):
+        key = (("arch", "a"), ("n", i))
+        items.append((key, {"perf.x": float(i)} if i % 3 else None))
+    mc.put_many("fp", items)
+    for i in range(10):
+        found, val = mc.get("fp", (("arch", "a"), ("n", i)))
+        assert found
+        assert val == ({"perf.x": float(i)} if i % 3 else None)
+    assert mc.size("fp") == 10
+    mc.put_many("fp", [])                   # no-op, no error
+    mc.close()
+
+
+def test_engine_batches_disk_writes(monkeypatch, tmp_path):
+    """A measure_batch flushes every new result to disk in one put_many."""
+    _stub_compiles(monkeypatch)
+    space = small_space()
+    path = str(tmp_path / "c.sqlite")
+    eng = Engine(space, {"single": object()}, n_workers=4,
+                 persistent_cache=path)
+    calls = []
+    orig = eng.persistent.put_many
+
+    def spy(space_fp, items):
+        calls.append(len(list(items)))
+        return orig(space_fp, items)
+
+    monkeypatch.setattr(eng.persistent, "put_many", spy)
+    rng = random.Random(7)
+    pts = [{**space.random_point(rng), "mesh": "single"} for _ in range(6)]
+    eng.measure_batch(pts)
+    assert calls and sum(calls) == eng.persistent.size(eng.space_fp)
+    assert len(calls) == 1                  # one transaction for the batch
+    eng.close()
+
+
+def test_calibrator_persistence_alongside_cache(monkeypatch, tmp_path):
+    _stub_compiles(monkeypatch)
+    space = small_space()
+    path = str(tmp_path / "c.sqlite")
+    monkeypatch.setenv("COLLIE_CALIB", "1")
+    eng = Engine(space, {"single": object()}, persistent_cache=path)
+    assert eng._calib_path == path + ".calib.json"
+    pts = [{**space.random_point(random.Random(8)), "mesh": "single"}
+           for _ in range(12)]
+    eng.measure_batch(pts)
+    n_obs = eng.surrogate.calibrator.n_observed
+    assert n_obs > 0
+    eng.close()                             # saves calibrator state
+    eng2 = Engine(space, {"single": object()}, persistent_cache=path)
+    assert eng2.surrogate.calibrator.n_observed == n_obs
+    eng2.close()
+
+
+def test_mfs_prescreen_short_circuits_to_run_identical(monkeypatch):
+    _stub_compiles(monkeypatch)
+    space = small_space()
+    eng_full = Engine(space, {"single": object()}, persistent_cache=False)
+    eng_pre = Engine(space, {"single": object()}, persistent_cache=False)
+    rng = random.Random(9)
+    # a decode witness: every train-only factor is pinned by normalize, and
+    # n_microbatch/params_f32 etc. map to identical RunPolicies
+    p = {**space.random_point(rng), "mesh": "single", "shape": "decode_s"}
+    p = space.normalize(p)
+    full = construct_mfs(eng_full, space, p, "A2", fidelity="full")
+    pre = construct_mfs(eng_pre, space, p, "A2", fidelity="prescreen")
+    assert pre.n_tests <= full.n_tests      # never measures more
+    assert eng_pre.n_attempts <= eng_full.n_attempts
+    # identical conditions: the short-circuit is a proof, not a heuristic
+    assert pre.conditions == full.conditions
+    eng_full.close()
+    eng_pre.close()
+
+
+def test_batching_helpers_degrade_for_minimal_engines():
+    class Minimal:
+        n_compiles = 0
+
+        def measure(self, p):
+            self.n_compiles += 1
+            return {"perf.x": 1.0}
+
+    e = Minimal()
+    res, spents = batching.measure_batch_spent(e, [{"a": 1}, {"a": 2}],
+                                               prescreen=4)
+    assert res == [{"perf.x": 1.0}] * 2 and len(spents) == 2
+    assert batching.predict_batch(e, [{"a": 1}]) == [None]
+    assert batching.prediction_value(None, "perf.x", "min") == (1, 0.0)
+    assert batching.prediction_value({"perf.x": 2.0}, "perf.x", "min") \
+        < batching.prediction_value({"perf.x": 3.0}, "perf.x", "min")
+    assert batching.prediction_value({"perf.x": 3.0}, "perf.x", "max") \
+        < batching.prediction_value({"perf.x": 2.0}, "perf.x", "max")
+
+
+# ------------------------------------------------------------ BO GP cache
+def test_gp_state_matches_from_scratch_posterior():
+    rng = np.random.default_rng(0)
+    X = rng.integers(0, 2, (14, 9)).astype(float)
+    y = rng.normal(size=14)
+    Xs = rng.integers(0, 2, (6, 9)).astype(float)
+    gp = _GPState()
+    gp.extend(list(X[:5]), 1e-3)
+    gp.extend(list(X[5:]), 1e-3)
+    ls = gp.median_ls()
+    mu, sd = gp.posterior(y, Xs, ls)
+    mu_ref, sd_ref = _gp_posterior(X, y, Xs, ls)
+    np.testing.assert_allclose(mu, mu_ref, atol=1e-8)
+    np.testing.assert_allclose(sd, sd_ref, atol=1e-8)
+
+
+def test_gp_state_block_update_and_ls_change_parity():
+    rng = np.random.default_rng(1)
+    X = rng.integers(0, 2, (10, 7)).astype(float)
+    gp = _GPState()
+    gp.extend(list(X), 1e-3)
+    ls = gp.median_ls()
+    Xs = rng.integers(0, 2, (4, 7)).astype(float)
+    gp.posterior(rng.normal(size=10), Xs, ls)     # factorize at n=10
+    # append rows -> block-update path (same ls)
+    X2 = rng.integers(0, 2, (5, 7)).astype(float)
+    gp.extend(list(X2), 1e-3)
+    y = rng.normal(size=15)
+    mu, sd = gp.posterior(y, Xs, ls)
+    mu_ref, sd_ref = _gp_posterior(np.vstack([X, X2]), y, Xs, ls)
+    np.testing.assert_allclose(mu, mu_ref, atol=1e-8)
+    np.testing.assert_allclose(sd, sd_ref, atol=1e-8)
+    # lengthscale change -> refactor from cached distances
+    mu2, sd2 = gp.posterior(y, Xs, ls * 1.7)
+    mu2_ref, sd2_ref = _gp_posterior(np.vstack([X, X2]), y, Xs, ls * 1.7)
+    np.testing.assert_allclose(mu2, mu2_ref, atol=1e-8)
+    np.testing.assert_allclose(sd2, sd2_ref, atol=1e-8)
+
+
+def test_gp_state_mixed_noise_levels():
+    """Fidelity-0 seeds at higher noise + real observations coexist."""
+    rng = np.random.default_rng(2)
+    X0 = rng.integers(0, 2, (6, 5)).astype(float)
+    X1 = rng.integers(0, 2, (7, 5)).astype(float)
+    gp = _GPState()
+    gp.extend(list(X0), 0.25)
+    gp.extend(list(X1), 1e-3)
+    y = rng.normal(size=13)
+    ls = gp.median_ls()
+    mu, sd = gp.posterior(y, X1[:3], ls)
+    noise_vec = np.concatenate([np.full(6, 0.25), np.full(7, 1e-3)])
+    mu_ref, sd_ref = _gp_posterior(np.vstack([X0, X1]), y, X1[:3], ls,
+                                   noise=noise_vec)
+    np.testing.assert_allclose(mu, mu_ref, atol=1e-8)
+    np.testing.assert_allclose(sd, sd_ref, atol=1e-8)

@@ -28,6 +28,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core.benchscale import BENCH_SHAPES, bench_archs, bench_meshes
 from repro.core.catalog import render_markdown, save_catalog
+from repro.core.corpus import Corpus
 from repro.core.engine import Engine
 from repro.core.measure_cache import MeasureCache
 from repro.core.sa import campaign, rank_counters
@@ -121,8 +122,13 @@ def main():
                            seed=123)
     counters_cfg = [(c, "max" if c.startswith("diag.") else "min")
                     for c in ranked]
+    corpus = Corpus(meta={
+        "scale": "bench", "archs": list(ARCH_SUBSET),
+        "restrict": {k: list(v) for k, v in restrict.items()},
+        "source": "bench_fidelity"})
     gt = campaign(gt_engine, space, counters_cfg, seed=7,
-                  budget_compiles=GT_BUDGET, label="ground-truth")
+                  budget_compiles=GT_BUDGET, label="ground-truth",
+                  corpus=corpus)
     save_catalog(gt.anomalies,
                  os.path.join(RESULTS, f"bench_gt_catalog{_SUFFIX}.json"),
                  {"budget": GT_BUDGET, "space": space.size(),
@@ -154,7 +160,8 @@ def main():
             e = fresh(space)
             r = campaign(e, space, counters_cfg, seed=seed,
                          budget_compiles=RUN_BUDGET, label=f"sa-{fid}",
-                         fidelity=fid, overprovision=OVERPROVISION)
+                         fidelity=fid, overprovision=OVERPROVISION,
+                         corpus=corpus)
             per_seed.append(run_metrics(r, gt.anomalies, e.stats()))
             e.close()
         agg = summarize_credits(
@@ -176,6 +183,10 @@ def main():
               f"compiles_per_anomaly="
               f"{summary[fid]['compiles_per_anomaly'] or float('nan'):.1f}",
               flush=True)
+
+    corpus.save(os.path.join(RESULTS, f"bench_fidelity_corpus{_SUFFIX}.json"))
+    print(f"# corpus: {len(corpus)} unique signatures "
+          f"({sum(e.hits for e in corpus.ordered())} finds)", flush=True)
 
     full_cpa = summary["full"]["compiles_per_anomaly"]
     pre_cpa = summary["prescreen"]["compiles_per_anomaly"]

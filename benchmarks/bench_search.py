@@ -20,6 +20,7 @@ from repro.core import anomaly
 from repro.core.benchscale import BENCH_SHAPES, bench_archs, bench_meshes
 from repro.core.bo import bo_search
 from repro.core.catalog import render_markdown, save_catalog
+from repro.core.corpus import Corpus
 from repro.core.engine import Engine
 from repro.core.measure_cache import MeasureCache
 from repro.core.random_search import random_search
@@ -95,10 +96,17 @@ def main():
     diag_ranked = [(c, "max") for c in ranked if c.startswith("diag.")]
     perf_ranked = [(c, "min") for c in ranked if c.startswith("perf.")]
 
+    # every find from every run below lands in one deduplicated corpus
+    corpus = Corpus(meta={
+        "scale": "bench", "archs": list(ARCH_SUBSET),
+        "restrict": {"grad_compress": ["none"], "scan_layers": [True]},
+        "source": "bench_search"})
+
     # ---- phase 1: ground truth
     gt_engine = fresh(space)
     gt = campaign(gt_engine, space, diag_ranked + perf_ranked, seed=7,
-                  budget_compiles=GT_BUDGET, label="ground-truth")
+                  budget_compiles=GT_BUDGET, label="ground-truth",
+                  corpus=corpus)
     save_catalog(gt.anomalies, os.path.join(os.path.dirname(__file__),
                                             "results", "bench_gt_catalog.json"),
                  {"budget": GT_BUDGET, "space": space.size()})
@@ -109,16 +117,26 @@ def main():
           flush=True)
 
     variants = {
+        # random runs with mfs_construct=False (the paper's raw-fuzzing
+        # baseline), so like the nomfs ablations below its "conditions" are
+        # full witness points — not corpus-wired to avoid degenerate
+        # one-off signatures
         "random": lambda e, s: random_search(e, space, seed=s,
                                              budget_compiles=RUN_BUDGET),
         "bo-diag": lambda e, s: bo_search(e, space, diag_ranked[0][0], "max",
-                                          seed=s, budget_compiles=RUN_BUDGET),
+                                          seed=s, budget_compiles=RUN_BUDGET,
+                                          corpus=corpus),
         "collie-diag": lambda e, s: campaign(e, space, diag_ranked, seed=s,
                                              budget_compiles=RUN_BUDGET,
-                                             label="collie-diag"),
+                                             label="collie-diag",
+                                             corpus=corpus),
         "collie-perf": lambda e, s: campaign(e, space, perf_ranked, seed=s,
                                              budget_compiles=RUN_BUDGET,
-                                             label="collie-perf"),
+                                             label="collie-perf",
+                                             corpus=corpus),
+        # nomfs ablations deliberately not corpus-wired: without MFS
+        # construction their "conditions" are the full witness point, which
+        # would flood the corpus with degenerate one-off signatures
         "sa-diag-nomfs": lambda e, s: campaign(e, space, diag_ranked, seed=s,
                                                budget_compiles=RUN_BUDGET,
                                                mfs_skip=False,
@@ -145,6 +163,12 @@ def main():
         mean_str = f"{sum(means)/len(means):.1f}" if means else "-"
         print(f"bench_search,{name},found={s['n_found']}/{s['n_gt']},"
               f"mean_compiles_to_find={mean_str}", flush=True)
+
+    # raw (un-minimized) corpus of everything this run discovered — merge
+    # into the committed corpus with `python -m repro.core.corpus merge`
+    corpus.save(os.path.join(RESULTS, "bench_search_corpus.json"))
+    print(f"# corpus: {len(corpus)} unique signatures "
+          f"({sum(e.hits for e in corpus.ordered())} finds)", flush=True)
 
     engine_stats = aggregate_stats()
     save_json("bench_search.json", {

@@ -173,7 +173,7 @@ def bo_search(engine, space: SearchSpace, counter: str, mode: str,
               mfs_skip: bool = True, mfs_construct: bool = True,
               anomaly_set: list | None = None,
               label: str = "bo", fidelity: str = "full",
-              overprovision: int = 4) -> SearchResult:
+              overprovision: int = 4, corpus=None) -> SearchResult:
     rng = random.Random(seed)
     enc = _encoder(space)
     prescreen = fidelity == "prescreen"
@@ -223,6 +223,8 @@ def bo_search(engine, space: SearchSpace, counter: str, mode: str,
                         else MFS(kind, {f: (p[f],) for f in space.factors},
                                  dict(p))
                     S.append(mf)
+                    if corpus is not None:   # bookkeeping: no measurements
+                        corpus.add(mf, source=label)
                     events.append(Event(time.time() - start, spent(), dict(p),
                                         frozenset([kind]), None, mf))
         gp.extend(rows, _NOISE_REAL)

@@ -9,7 +9,9 @@ from .mfs import MFS
 
 
 def save_catalog(anomalies: list, path: str, meta: dict | None = None):
-    os.makedirs(os.path.dirname(path), exist_ok=True)
+    d = os.path.dirname(path)
+    if d:                       # bare filenames have no directory to create
+        os.makedirs(d, exist_ok=True)
     data = {"meta": meta or {}, "anomalies": [
         {"kind": a.kind, "conditions": {k: list(v) for k, v in
                                         a.conditions.items()},

@@ -122,6 +122,7 @@ class Engine:
         self.n_predictions = 0     # fidelity-0 predictions served
         self.n_promoted = 0        # prescreened points promoted to compile
         self.n_screened_out = 0    # prescreened points never compiled
+        self.n_minimize_probes = 0  # spent by witness minimize/tighten passes
         self.compile_time = 0.0
 
     def _resolve_calib_path(self, calibrator_path):
@@ -187,6 +188,13 @@ class Engine:
         with self._lock:
             self.n_promoted += int(n_promoted)
             self.n_screened_out += int(n_screened)
+
+    def note_minimize(self, n_probes: int):
+        """Attribute ``n_probes`` of the budget to corpus minimization /
+        condition tightening (minimize.py), so ``stats()`` can split search
+        spend from regression-corpus upkeep."""
+        with self._lock:
+            self.n_minimize_probes += int(n_probes)
 
     def _observe(self, key, point, result):
         """Fold a completed real measurement into the residual calibrator —
@@ -414,6 +422,7 @@ class Engine:
                 "n_predictions": self.n_predictions,
                 "n_promoted": self.n_promoted,
                 "n_screened_out": self.n_screened_out,
+                "n_minimize_probes": self.n_minimize_probes,
                 "n_calibrated":
                     (self.surrogate.calibrator.n_observed
                      if self.surrogate is not None else 0),

@@ -27,7 +27,7 @@ def random_search(engine, space: SearchSpace, seed: int = 0,
                   mfs_skip: bool = False, mfs_construct: bool = False,
                   pool: int = 8, label: str = "random",
                   fidelity: str = "full",
-                  overprovision: int = 4) -> SearchResult:
+                  overprovision: int = 4, corpus=None) -> SearchResult:
     rng = random.Random(seed)
     prescreen = fidelity == "prescreen"
     over = max(int(overprovision), 1) if prescreen else 1
@@ -81,6 +81,8 @@ def random_search(engine, space: SearchSpace, seed: int = 0,
                         mf = MFS(kind, {f: (p[f],) for f in space.factors},
                                  dict(p))
                     S.append(mf)
+                    if corpus is not None:   # bookkeeping: no measurements
+                        corpus.add(mf, source=label)
                     events.append(Event(time.time() - start, spent(), dict(p),
                                         frozenset([kind]), None, mf))
     return SearchResult(label, "-", events, S, spent(),

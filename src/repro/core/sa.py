@@ -89,7 +89,8 @@ def simulated_annealing(engine, space: SearchSpace, counter: str,
                         mfs_construct: bool = True,
                         anomaly_set: list | None = None,
                         fidelity: str = "full",
-                        overprovision: int = 4) -> SearchResult:
+                        overprovision: int = 4,
+                        corpus=None) -> SearchResult:
     rng = random.Random(seed)
     prescreen = fidelity == "prescreen"
     over = max(int(overprovision), 1) if prescreen else 1
@@ -160,6 +161,8 @@ def simulated_annealing(engine, space: SearchSpace, counter: str,
             else:
                 mf = MFS(kind, {f: (p[f],) for f in space.factors}, dict(p))
             S.append(mf)
+            if corpus is not None:       # pure bookkeeping: no measurements
+                corpus.add(mf, source=f"sa:{counter}")
             events.append(Event(time.time() - start, spent(), dict(p),
                                 frozenset([kind]), None, mf))
             new = True
@@ -333,7 +336,7 @@ def rank_counters(engine, space: SearchSpace, names: list, seed: int = 0,
 def campaign(engine, space: SearchSpace, counters_cfg: list, seed: int = 0,
              budget_compiles: int = 300, mfs_skip=True, mfs_construct=True,
              label: str = "collie", fidelity: str = "full",
-             overprovision: int = 4) -> SearchResult:
+             overprovision: int = 4, corpus=None) -> SearchResult:
     """Optimize each (counter, mode) in ranked order, sharing the anomaly set
     and budget — the paper's end-to-end Collie run."""
     S: list[MFS] = []
@@ -351,7 +354,7 @@ def campaign(engine, space: SearchSpace, counters_cfg: list, seed: int = 0,
             engine, space, counter, mode, seed=seed,
             budget_compiles=min(share, left), mfs_skip=mfs_skip,
             mfs_construct=mfs_construct, anomaly_set=S,
-            fidelity=fidelity, overprovision=overprovision)
+            fidelity=fidelity, overprovision=overprovision, corpus=corpus)
         for e in r.events:
             e.n_spent += c_off
             e.t += t_off

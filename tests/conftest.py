@@ -11,3 +11,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running end-to-end test (real compiles)")
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--corpus-update", action="store_true", default=False,
+        help="anomaly-corpus replay: accept observed drift and rewrite "
+             "benchmarks/results/anomaly_corpus.json instead of failing "
+             "(use after an INTENDED behaviour change; review the diff)")

@@ -1,0 +1,62 @@
+"""Unit tests for the anomaly catalog: save/load round trip (including the
+bare-filename path that used to crash ``os.makedirs("")``) and the Table-2
+markdown rendering."""
+import os
+
+import pytest
+
+from repro.core.catalog import load_catalog, render_markdown, save_catalog
+from repro.core.mfs import MFS
+
+ANOMS = [
+    MFS("A1", {"preset": ("dp", "tp"), "shape": ("train_s",)},
+        {"preset": "dp", "shape": "train_s", "arch": "qwen2-1.5b",
+         "mesh": "multi", "n_microbatch": 4},
+        {"perf.roofline_efficiency": 0.1, "diag.peak_bytes": 123},
+        n_tests=7),
+    MFS("A2", {"mesh": ("multi",), "arch": ("mixtral-8x7b",)},
+        {"preset": "ep", "shape": "decode_s", "arch": "mixtral-8x7b",
+         "mesh": "multi"}, None, n_tests=3),
+    MFS("A4", {}, {"arch": "rwkv6-7b", "shape": "long_s"}),
+]
+
+
+def test_round_trip_preserves_everything(tmp_path):
+    path = str(tmp_path / "cat.json")
+    save_catalog(ANOMS, path, meta={"budget": 10})
+    back = load_catalog(path)
+    assert len(back) == len(ANOMS)
+    for a, b in zip(ANOMS, back):
+        assert b.kind == a.kind
+        assert b.conditions == {k: tuple(v) for k, v in a.conditions.items()}
+        assert b.witness == a.witness
+        assert b.counters == a.counters
+        assert b.n_tests == a.n_tests
+
+
+def test_save_catalog_bare_filename(tmp_path, monkeypatch):
+    """A path with no directory component must not crash (os.makedirs(''))."""
+    monkeypatch.chdir(tmp_path)
+    save_catalog(ANOMS, "catalog.json")
+    assert os.path.exists("catalog.json")
+    assert len(load_catalog("catalog.json")) == len(ANOMS)
+
+
+def test_save_catalog_creates_directories(tmp_path):
+    path = str(tmp_path / "a" / "b" / "cat.json")
+    save_catalog(ANOMS, path)
+    assert load_catalog(path)[0].kind == "A1"
+
+
+def test_render_markdown_scope_and_symptoms():
+    md = render_markdown(ANOMS, title="T")
+    lines = md.splitlines()
+    assert lines[0] == "### T"
+    assert len([l for l in lines if l.startswith("| ")]) == 1 + len(ANOMS)
+    # arch/shape conditions render as scope, other factors as conditions
+    assert "preset∈{dp,tp}" in md and "shape∈{train_s}" in md
+    assert "arch∈{mixtral-8x7b}" in md
+    # condition-free anomalies render as 'any'; symptom column is filled
+    assert "| any |" in md
+    assert "step >> analytic floor" in md
+    assert "HBM oversubscription" in md

@@ -1,0 +1,147 @@
+"""Anomaly regression corpus — CI replay harness (ISSUE 4).
+
+The committed corpus (``benchmarks/results/anomaly_corpus.json``, regenerated
+by ``benchmarks/make_corpus.py`` from the ground-truth catalog) turns every
+discovered anomaly into a permanent test.  Two layers:
+
+* **static invariants** (fast, no compiles): schema version, signature
+  integrity, witnesses normalized + valid in the recorded search space,
+  minimized witnesses strictly closer to the canonical baseline than the
+  raw witnesses they came from, and still matching their MFS conditions;
+* **replay** (slow, real compiles): one subprocess re-measures every
+  minimized witness at full fidelity on the bench meshes and asserts the
+  anomaly kind still fires — and that each near-boundary control point
+  still does NOT.  A code change that silently un-triggers (or widens) a
+  known anomaly fails here.
+
+Intended drift: run ``pytest tests/test_corpus_regression.py --corpus-update``
+— the replay rewrites the corpus (retiring dead entries, refreshing
+counters, dropping flipped controls) instead of failing; commit the diff.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.corpus import Corpus, signature
+from repro.core.minimize import witness_size
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CORPUS_PATH = os.path.join(REPO, "benchmarks", "results",
+                           "anomaly_corpus.json")
+
+if os.path.exists(CORPUS_PATH):
+    CORPUS = Corpus.load(CORPUS_PATH)
+    ENTRIES = CORPUS.ordered()
+else:                                    # pre-generation checkout
+    CORPUS, ENTRIES = None, []
+
+LIVE = [e for e in ENTRIES if not e.retired]
+
+pytestmark = pytest.mark.skipif(
+    CORPUS is None, reason="no committed corpus (run benchmarks/make_corpus.py)")
+
+
+def _space():
+    from repro.core.benchscale import BENCH_SHAPES, bench_archs
+    from repro.core.searchspace import SearchSpace
+    meta = CORPUS.meta
+    restrict = {k: tuple(v) for k, v in (meta.get("restrict") or {}).items()}
+    return SearchSpace(bench_archs(meta["archs"]), BENCH_SHAPES,
+                       restrict=restrict or None)
+
+
+# ------------------------------------------------------- static invariants
+def test_corpus_nonempty_and_signatures_unique():
+    assert LIVE, "committed corpus has no live entries"
+    sigs = [e.signature for e in ENTRIES]
+    assert len(sigs) == len(set(sigs))
+    for e in ENTRIES:
+        assert e.signature == signature(e.kind, e.conditions), e.signature
+
+
+def test_corpus_schema_version_rejects_unknown(tmp_path):
+    with open(CORPUS_PATH) as f:
+        data = json.load(f)
+    data["schema"] = 999
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps(data))
+    with pytest.raises(ValueError, match="schema"):
+        Corpus.load(str(p))
+
+
+def test_witnesses_valid_and_normalized_in_recorded_space():
+    space = _space()
+    for e in LIVE:
+        for name, p in [("witness", e.witness), ("raw", e.raw_witness)]:
+            assert space.valid(p), (e.signature, name)
+            assert p == space.normalize(p), (e.signature, name)
+        for c in e.controls:
+            assert space.valid(c), (e.signature, "control")
+
+
+def test_minimizer_strictly_reduced_every_witness():
+    """The acceptance bar: every committed minimized witness is strictly
+    closer to the canonical baseline than the raw driver witness."""
+    for e in LIVE:
+        assert e.minimized, e.signature
+        assert e.distance == witness_size(e.witness), e.signature
+        assert e.raw_distance == witness_size(e.raw_witness), e.signature
+        assert e.distance < e.raw_distance, \
+            f"{e.signature}: minimized {e.distance} !< raw {e.raw_distance}"
+
+
+def test_minimized_witness_still_matches_conditions():
+    for e in LIVE:
+        assert e.to_mfs().matches(e.witness), e.signature
+        # controls sit near the boundary: each differs from the witness
+        for c in e.controls:
+            assert c != e.witness, e.signature
+
+
+def test_corpus_roundtrip_is_stable(tmp_path):
+    """save(load(x)) == x byte-for-byte: the committed file diffs cleanly."""
+    p = tmp_path / "roundtrip.json"
+    CORPUS.save(str(p))
+    assert p.read_text() == open(CORPUS_PATH).read()
+
+
+# ------------------------------------------------------------------ replay
+@pytest.fixture(scope="module")
+def replay_reports(request, tmp_path_factory):
+    """Run the full-fidelity replay once, in a subprocess that owns its
+    XLA device count (the test process keeps its single real CPU device)."""
+    out = tmp_path_factory.mktemp("replay") / "report.json"
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=32"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.setdefault("COLLIE_WORKERS", "4")
+    update = request.config.getoption("--corpus-update")
+    cmd = [sys.executable, "-m", "repro.core.corpus", "replay", CORPUS_PATH,
+           "--json", str(out)] + (["--update"] if update else [])
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       timeout=1800)
+    assert out.exists(), \
+        f"replay produced no report\nstdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    with open(out) as f:
+        reports = {rep["signature"]: rep for rep in json.load(f)["reports"]}
+    return {"reports": reports, "updated": update, "stdout": r.stdout}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("sig", [e.signature for e in LIVE])
+def test_replay_anomaly_still_triggers(replay_reports, sig):
+    rep = replay_reports["reports"].get(sig)
+    assert rep is not None, f"replay produced no report for {sig}"
+    if replay_reports["updated"] and not rep["ok"]:
+        pytest.skip(f"drift accepted via --corpus-update: {sig}")
+    assert rep["kind_ok"], \
+        (f"{sig}: anomaly no longer triggers at its minimized witness "
+         f"(observed kinds: {rep['observed_kinds']}) — if this drift is "
+         f"intended, rerun with --corpus-update and commit the diff")
+    assert rep["controls_ok"], \
+        (f"{sig}: a near-boundary control point now triggers {rep['kind']} "
+         f"— the anomaly region widened; rerun with --corpus-update if "
+         f"intended")

@@ -173,3 +173,59 @@ def test_match_any():
     assert mfs.matches({"preset": "dp", "mesh": "multi", "x": 1})
     assert not mfs.matches({"preset": "tp", "mesh": "multi"})
     assert match_any([mfs], {"preset": "dp", "mesh": "multi"})
+
+
+def test_matches_missing_factor_is_conservative():
+    """A point that omits a conditioned factor can never match: the MFS
+    claims nothing about partial points (skip logic must not skip them)."""
+    mfs = MFS("A1", {"preset": ("dp",), "mesh": ("multi",)}, {})
+    assert not mfs.matches({"preset": "dp"})          # mesh missing
+    assert not mfs.matches({})
+    assert not match_any([mfs], {"mesh": "multi"})
+    # None is not a triggering value either
+    assert not mfs.matches({"preset": None, "mesh": "multi"})
+
+
+def test_matches_unnormalized_point_differs_from_normalized():
+    """matches() is literal: conditions are built on *normalized* points, so
+    callers must normalize first.  A decode-cell point with a scrambled
+    train-only factor demonstrates the trap — and that normalize fixes it."""
+    space = make_space()
+    rng = random.Random(0)
+    w = space.normalize({**space.random_point(rng), "shape": "decode_s"})
+    assert w["remat"] == "none"                       # pinned by normalize
+    mfs = MFS("A2", {"remat": ("none",), "shape": ("decode_s",)}, dict(w))
+    raw = {**w, "remat": "full"}                      # un-normalized decode
+    assert not mfs.matches(raw)                       # literal comparison
+    assert mfs.matches(space.normalize(raw))          # same workload, matches
+
+
+def test_construct_mfs_budget_exhaustion_still_well_formed():
+    """max_probes=1: a budget-starved construction measures one probe yet
+    returns a conservative, self-consistent MFS (paper: budget exhaustion
+    must lose information, not invent it)."""
+    space = make_space()
+    rule = {"preset": frozenset(["dp"]), "seq_shard": frozenset([False])}
+    eng = FakeEngine(space, rule)
+    rng = random.Random(2)
+    witness = None
+    for _ in range(4000):
+        p = space.random_point(rng)
+        m = eng.measure(p)
+        if m and "A2" in anomaly_mod.kinds(m, p["remat"]):
+            witness = p
+            break
+    assert witness is not None
+    n_before = eng.n_compiles
+    mfs = construct_mfs(eng, space, witness, "A2", eng.measure(witness),
+                        fidelity="prescreen", max_probes=1)
+    assert mfs.n_tests == 1                           # exactly one probe
+    assert eng.n_compiles - n_before <= 2             # probe + witness remeasure
+    assert mfs.matches(witness)                       # witness always inside
+    full = construct_mfs(eng, space, witness, "A2", eng.measure(witness))
+    for f, vals in mfs.conditions.items():
+        assert witness[f] in vals
+        # conservative: triggering sets only shrink vs the full construction
+        assert set(vals) <= set(full.conditions.get(f, space.factors[f]))
+    # every factor the full construction conditioned on is still conditioned
+    assert set(full.conditions) <= set(mfs.conditions)

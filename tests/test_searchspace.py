@@ -81,6 +81,57 @@ def test_mutation_valid_and_local(seed):
     assert len(explicit) <= 1
 
 
+@given(st.integers(0, 1000))
+@settings(max_examples=50, deadline=None)
+def test_normalize_idempotent(seed):
+    """normalize(normalize(p)) == normalize(p), including for raw points
+    whose inert factors were scrambled."""
+    space = SearchSpace(ARCHS, SHAPES)
+    rng = random.Random(seed)
+    p = {k: rng.choice(v) for k, v in space.factors.items()}  # un-normalized
+    q = space.normalize(p)
+    assert space.normalize(q) == q
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=50, deadline=None)
+def test_point_key_stable_under_renormalization(seed):
+    """point_key is a function of the *normalized* point: scrambling inert
+    factors or re-normalizing never changes identity."""
+    space = SearchSpace(ARCHS, SHAPES)
+    rng = random.Random(seed)
+    p = space.random_point(rng)
+    key = space.point_key(p)
+    assert space.point_key(space.normalize(p)) == key
+    scrambled = dict(p)
+    if space.shapes[p["shape"]].kind != "train":
+        scrambled["remat"] = rng.choice(space.factors["remat"])
+        scrambled["n_microbatch"] = rng.choice(space.factors["n_microbatch"])
+        assert space.point_key(scrambled) == key
+    assert dict(key) == space.normalize(p)     # key round-trips to the point
+
+
+@given(st.integers(0, 500), st.sampled_from(
+    ["mesh", "preset", "optimizer", "n_microbatch", "attn_impl", "arch"]))
+@settings(max_examples=40, deadline=None)
+def test_restrict_never_widens_a_domain(seed, factor):
+    space = SearchSpace(ARCHS, SHAPES)
+    rng = random.Random(seed)
+    dom = space.factors[factor]
+    k = rng.randint(1, len(dom))
+    allowed = rng.sample(list(dom), k)
+    r = SearchSpace(ARCHS, SHAPES, restrict={factor: tuple(allowed)})
+    assert set(r.factors[factor]) <= set(dom)
+    assert set(r.factors[factor]) <= set(allowed)
+    # junk restriction values can only narrow-to-nothing -> fall back whole
+    r2 = SearchSpace(ARCHS, SHAPES, restrict={factor: ("no-such-value",)})
+    assert set(r2.factors[factor]) == set(dom)
+    for f in space.factors:
+        if f != factor:
+            assert r.factors[f] == space.factors[f]
+    assert r.size() <= space.size()
+
+
 def test_to_run_round_trip(space):
     rng = random.Random(3)
     p = space.random_point(rng)

@@ -93,6 +93,8 @@ def run_metrics(result, gt, engine_stats):
         "n_compiles": engine_stats.get("n_compiles"),
         "n_screened_out": engine_stats.get("n_screened_out"),
         "n_promoted": engine_stats.get("n_promoted"),
+        "n_struct_hits": engine_stats.get("n_struct_hits"),
+        "n_lowerings": engine_stats.get("n_lowerings"),
         "credits": {str(i): c for i, c in credits.items()},
     }
 
@@ -171,12 +173,19 @@ def main():
                                      for m in per_seed]))
         cpas = [m["compiles_per_anomaly"] for m in per_seed
                 if m["compiles_per_anomaly"] is not None]
+        # informational (ISSUE 5): how much of the run's realized work was
+        # served by structural dedup instead of an XLA compile
+        struct_hits = sum(m.get("n_struct_hits") or 0 for m in per_seed)
+        compiles = sum(m.get("n_compiles") or 0 for m in per_seed)
         summary[fid] = {
             "per_seed": per_seed,
             "n_found": agg["n_found"], "n_gt": agg["n_gt"],
             "kinds_found": kinds,
             "compiles_per_anomaly":
                 (sum(cpas) / len(cpas)) if cpas else None,
+            "n_struct_hits": struct_hits,
+            "struct_hit_rate":
+                struct_hits / max(struct_hits + compiles, 1),
         }
         print(f"bench_fidelity,{fid},found={agg['n_found']}/{agg['n_gt']},"
               f"kinds={'+'.join(kinds) or '-'},"
@@ -206,7 +215,8 @@ def main():
         "compile_speedup_per_anomaly": speedup,
         "acceptance_ok": ok,
         "gt_stats": {k: gt_stats[k] for k in
-                     ("n_compiles", "n_disk_hits", "compile_time")},
+                     ("n_compiles", "n_disk_hits", "compile_time",
+                      "n_struct_hits", "n_lowerings", "lower_time")},
         "wall_s": time.time() - t0,
     })
     print(f"# prescreen vs full: {speedup and f'{speedup:.1f}x' or 'n/a'} "

@@ -90,7 +90,12 @@ def compare(update_baseline: bool) -> int:
                        "kinds_found": cur["kinds_found"],
                        "budget": res["budget"],
                        "gt_budget": res["gt_budget"],
-                       "archs": res["archs"]}, f, indent=1)
+                       "archs": res["archs"],
+                       # informational (ISSUE 5): structural-dedup effect at
+                       # baseline time — NOT gated, recorded for trend-spotting
+                       "n_struct_hits": cur.get("n_struct_hits"),
+                       "struct_hit_rate": cur.get("struct_hit_rate")},
+                      f, indent=1)
         print(f"compare,updated-baseline,{wall:.0f},"
               f"cpa={cur['compiles_per_anomaly']:.1f}")
         return 0
@@ -105,7 +110,10 @@ def compare(update_baseline: bool) -> int:
         fail.append(f"kinds_found {cur['kinds_found']} lost baseline kinds "
                     f"{base['kinds_found']}")
     status = "FAIL" if fail else "ok"
-    print(f"compare,{status},{wall:.0f},cpa={cpa} baseline={base_cpa}")
+    # struct-dedup fields are informational: surfaced, never gated
+    print(f"compare,{status},{wall:.0f},cpa={cpa} baseline={base_cpa},"
+          f"compiles_avoided={cur.get('n_struct_hits')},"
+          f"struct_hit_rate={cur.get('struct_hit_rate')}")
     for msg in fail:
         print(f"compare,FAIL,{msg}", file=sys.stderr)
     return 1 if fail else 0

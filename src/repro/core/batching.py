@@ -66,6 +66,26 @@ def predict_batch(engine, points: list) -> list:
     return [None] * len(points)
 
 
+def measure_lowered_batch(engine, points: list) -> list:
+    """Fidelity-1 "lowered" estimates aligned with ``points`` — [None]*n
+    for engines without the tier (they degrade to full fidelity)."""
+    mlb = getattr(engine, "measure_lowered_batch", None)
+    if mlb is not None:
+        return mlb(points)
+    ml = getattr(engine, "measure_lowered", None)
+    if ml is not None:
+        return [ml(p) for p in points]
+    return [None] * len(points)
+
+
+def lowered_key(engine, point) -> str | None:
+    """The point's structural fingerprint, or None when the engine can't
+    produce one.  Fingerprint equality PROVES two points share counters, so
+    drivers may treat fp-identical probes as already-measured."""
+    lk = getattr(engine, "lowered_key", None)
+    return lk(point) if lk is not None else None
+
+
 def note_prescreen(engine, n_promoted: int, n_screened: int):
     """Report a driver-side prescreen decision to the engine's stats (no-op
     for engines without the hook)."""

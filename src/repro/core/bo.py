@@ -24,6 +24,9 @@ surrogate at a distinct (higher) noise level, so the acquisition starts with
 a sketch of the whole landscape before the first compile, and (2) prescreens
 the per-iteration candidate pool down to the surrogate-most-promising slice
 before ranking by EI.  ``fidelity="full"`` is the PR-1 baseline.
+``fidelity="lowered"`` (ISSUE 5) keeps EI/measurement at full fidelity and
+builds MFSes through the fidelity-1 tier (structural-fingerprint
+short-circuits + lowered-counter probe ordering).
 """
 from __future__ import annotations
 

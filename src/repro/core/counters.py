@@ -5,10 +5,32 @@ Mirrors the paper's two counter classes:
   to LOW-value regions by the search);
 * diagnostic counters — collective-traffic blowup, layout-thrash bytes, remat
   duplication, memory overshoot, sharding fallbacks (driven HIGH).
+
+Split-phase measurement (ISSUE 5): ``measure_cell`` is now the composition
+of two separable phases —
+
+* :func:`lower_cell` — trace + jit-lower the cell (cheap, Python/GIL-bound)
+  and derive a **structural fingerprint**: a hash of the canonicalized
+  pre-XLA HLO text of the lowered module *plus* every non-compile input
+  that feeds the counters (analytic floors, sharding-fallback count, mesh
+  size).  Two points with equal fingerprints are guaranteed to produce
+  byte-identical counter dicts, so the engine compiles only one of them.
+* :func:`compile_lowered` — the expensive phase: XLA compile + memory /
+  cost / HLO analysis, assembled into a :class:`Measurement`.
+
+:func:`lowered_counters` is the fidelity-1 "lowered" tier: it runs the
+single-pass HLO analyzer on the *pre-optimization* module text, giving real
+structural counters (compiled FLOPs incl. remat recompute, layout-thrash
+bytes) without compiling.  Pre-SPMD-partitioning modules carry no
+collectives, trip counts, or remat metadata, so collective/memory counters
+stay at their fidelity-0 surrogate estimates in that tier (see engine.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
+import re
 import time
 from typing import Any
 
@@ -41,11 +63,105 @@ class Measurement:
         }
 
 
-def measure_cell(cell, chip: hw.ChipSpec = hw.V5E) -> Measurement:
+# ------------------------------------------------------------ lower phase
+
+# attributes of the HLO text that may vary without changing the program
+# (defensive: jax 0.4.x emits no metadata in lowered text, but source-path
+# metadata would break cross-machine fingerprint stability if it appeared)
+_METADATA_RE = re.compile(r", metadata=\{[^{}]*\}")
+
+
+def canonicalize_hlo_text(text: str) -> str:
+    """Strip presentation-only noise so the fingerprint keys the *program*."""
+    if "metadata=" in text:
+        text = _METADATA_RE.sub("", text)
+    return text
+
+
+@dataclasses.dataclass
+class LoweredCell:
+    """Phase-1 artifact: a lowered (pre-XLA-optimization) cell.
+
+    ``fingerprint`` hashes the canonical module text together with every
+    counter input that is decided *before* compilation (analytic floors,
+    useful-FLOP numerator, sharding fallbacks, mesh size): equal
+    fingerprints ⇒ equal Measurement counters, by construction.
+    """
+    cell: Any
+    lowered: Any            # jax.stages.Lowered
+    text: str               # canonicalized pre-XLA HLO text
+    lower_s: float
+    floors: dict
+    mf_useful: float
+    fingerprint: str
+
+
+def _floors_of(cell, chip: hw.ChipSpec):
+    floors = analytic.step_floor_seconds(cell.cfg, cell.shape, cell.policy,
+                                         cell.mesh, chip)
+    mf_useful = (floors["matmul_model_flops"]
+                 + analytic.attention_flops(cell.cfg, cell.shape)
+                 + analytic.recurrence_flops(cell.cfg, cell.shape))
+    return floors, mf_useful
+
+
+def lower_cell(cell, chip: hw.ChipSpec = hw.V5E) -> LoweredCell:
+    """Trace + lower the cell (no XLA) and fingerprint its structure."""
     t0 = time.time()
     lowered = cell.lower()
-    compiled = lowered.compile()
-    compile_s = time.time() - t0
+    text = canonicalize_hlo_text(lowered.as_text(dialect="hlo"))
+    lower_s = time.time() - t0
+    floors, mf_useful = _floors_of(cell, chip)
+    h = hashlib.sha256(text.encode())
+    h.update(json.dumps(
+        {"floors": {k: float(v) for k, v in sorted(floors.items())},
+         "mf_useful": float(mf_useful),
+         "fallbacks": int(cell.stats.fallbacks),
+         "mesh_size": int(cell.mesh.size),
+         "chip": chip.name},
+        sort_keys=True).encode())
+    return LoweredCell(cell, lowered, text, lower_s, floors, mf_useful,
+                       h.hexdigest()[:24])
+
+
+def lowered_counters(lc: LoweredCell, chip: hw.ChipSpec = hw.V5E) -> dict:
+    """Fidelity-1 structural counters from the pre-XLA module (no compile).
+
+    The lowered module is un-partitioned (it computes the *global* program;
+    SPMD collectives appear only during compilation), so structure-derived
+    quantities are global and scaled per-device by the mesh size.  Returns a
+    flat dict of the counters that are real at this tier; collective counts
+    and peak memory are absent (the engine overlays surrogate estimates).
+    """
+    hlo = hloanalysis.analyze(lc.text)
+    n = max(lc.cell.mesh.size, 1)
+    floors = lc.floors
+    flops_dev = hlo["flops"] / n
+    bytes_dev = hlo["bytes_hbm"] / n
+    compute_s = flops_dev / chip.peak_flops_bf16
+    memory_s = bytes_dev / chip.hbm_bw
+    # collective term is unknown pre-partitioning: bound by its floor
+    bound_s = max(compute_s, memory_s, floors["collective_s"])
+    return {
+        "perf.roofline_efficiency":
+            min(floors["floor_s"] / max(bound_s, 1e-30), 1.0),
+        "perf.useful_flops_ratio":
+            lc.mf_useful / max(hlo["flops"], 1.0),
+        "diag.transpose_bytes": hlo["transpose_bytes"] / n,
+    }
+
+
+# ---------------------------------------------------------- compile phase
+
+def compile_lowered(lc: LoweredCell, chip: hw.ChipSpec = hw.V5E
+                    ) -> Measurement:
+    cell = lc.cell
+    t0 = time.time()
+    compiled = lc.lowered.compile()
+    compile_s = lc.lower_s + (time.time() - t0)
+    release = getattr(cell, "release_lowered", None)
+    if release is not None:         # don't pin the traced module on the
+        release()                   # Measurement's cell (see steps.py)
 
     ma = compiled.memory_analysis()
     memory = {
@@ -76,13 +192,10 @@ def measure_cell(cell, chip: hw.ChipSpec = hw.V5E) -> Measurement:
     dom = max(terms, key=terms.get)
     bound_s = terms[dom]
 
-    floors = analytic.step_floor_seconds(cell.cfg, cell.shape, cell.policy,
-                                         cell.mesh, chip)
+    floors = lc.floors
     mf = floors["assignment_model_flops"]
     # scale-stable numerator: matmul params + attention + recurrence terms
-    mf_useful = (floors["matmul_model_flops"]
-                 + analytic.attention_flops(cell.cfg, cell.shape)
-                 + analytic.recurrence_flops(cell.cfg, cell.shape))
+    mf_useful = lc.mf_useful
     total_hlo_flops = flops_dev * n
     roofline = {
         **terms, "dominant": dom, "bound_s": bound_s,
@@ -117,3 +230,8 @@ def measure_cell(cell, chip: hw.ChipSpec = hw.V5E) -> Measurement:
     }
     return Measurement(cell, compile_s, memory, ca, hlo, roofline, floors,
                        perf, diag)
+
+
+def measure_cell(cell, chip: hw.ChipSpec = hw.V5E) -> Measurement:
+    """One-shot lower + compile + analyze (the pre-split entry point)."""
+    return compile_lowered(lower_cell(cell, chip), chip)

@@ -14,6 +14,17 @@ factor domains, full arch/shape configs, mesh shapes, the JAX version and
 backend.  A stale cache is therefore impossible to hit silently — any config
 or toolchain change changes the fingerprint and cold-starts that slice.
 
+Structural-dedup tables (ISSUE 5): the split-phase engine additionally
+stores counters keyed by the **structural fingerprint** of the lowered
+module (``structs``: ``(space, hlo_fp) -> counters``) and the mapping from
+each measured point to its fingerprint (``point_fps``: ``(space, key) ->
+hlo_fp``).  A *new* point that lowers to a program some earlier point —
+this campaign or any previous one — already compiled is served from
+``structs`` without compiling.  Both tables ride the same space
+fingerprint, so the invalidation story is unchanged: any config/toolchain
+change cold-starts all three tables together.  Old cache files upgrade in
+place (``CREATE TABLE IF NOT EXISTS``).
+
 Enable per-engine via ``Engine(..., persistent_cache=path)`` or process-wide
 with the ``COLLIE_CACHE`` env var.
 """
@@ -89,6 +100,15 @@ class MeasureCache:
                 "CREATE TABLE IF NOT EXISTS measurements ("
                 " space TEXT NOT NULL, key TEXT NOT NULL, value TEXT,"
                 " created REAL NOT NULL, PRIMARY KEY (space, key))")
+            self._conn.execute(
+                "CREATE TABLE IF NOT EXISTS structs ("
+                " space TEXT NOT NULL, fp TEXT NOT NULL, value TEXT,"
+                " created REAL NOT NULL, PRIMARY KEY (space, fp))")
+            self._conn.execute(
+                "CREATE TABLE IF NOT EXISTS point_fps ("
+                " space TEXT NOT NULL, key TEXT NOT NULL,"
+                " fp TEXT NOT NULL, created REAL NOT NULL,"
+                " PRIMARY KEY (space, key))")
             self._conn.commit()
 
     def get(self, space_fp: str, key) -> tuple:
@@ -102,6 +122,82 @@ class MeasureCache:
         if row is None:
             return False, None
         return True, (None if row[0] is None else json.loads(row[0]))
+
+    def get_many(self, space_fp: str, keys) -> dict:
+        """Resolve a whole batch of point keys in one query.
+
+        -> {point_key_str: counters-or-None} for the keys present (absent
+        keys are simply missing from the dict).  ``measure_batch`` uses this
+        to prefetch a proposal batch's disk hits in one sqlite round-trip
+        instead of one SELECT per point.
+        """
+        ks = [point_key_str(k) for k in keys]
+        out: dict = {}
+        CHUNK = 400                   # stay under SQLITE_MAX_VARIABLE_NUMBER
+        with self._lock:
+            for i in range(0, len(ks), CHUNK):
+                chunk = ks[i:i + CHUNK]
+                q = ("SELECT key, value FROM measurements WHERE space=? "
+                     f"AND key IN ({','.join('?' * len(chunk))})")
+                for k, v in self._conn.execute(q, (space_fp, *chunk)):
+                    out[k] = None if v is None else json.loads(v)
+        return out
+
+    # ------------------------------------------------- structural fingerprints
+    def get_struct(self, space_fp: str, fp: str) -> tuple:
+        """-> (found, counters-or-None) for a structural fingerprint."""
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT value FROM structs WHERE space=? AND fp=?",
+                (space_fp, fp)).fetchone()
+        if row is None:
+            return False, None
+        return True, (None if row[0] is None else json.loads(row[0]))
+
+    def put_structs(self, space_fp: str, items):
+        """Write many (fp, counters-or-None) rows in one transaction."""
+        rows = []
+        for fp, counters in items:
+            if counters is not None:
+                counters = {k: _jsonable(v) for k, v in counters.items()
+                            if not k.startswith("_")}
+            rows.append((space_fp, fp,
+                         None if counters is None else json.dumps(counters),
+                         time.time()))
+        if not rows:
+            return
+        with self._lock:
+            self._conn.executemany(
+                "INSERT OR REPLACE INTO structs VALUES (?,?,?,?)", rows)
+            self._conn.commit()
+
+    def get_fp(self, space_fp: str, key) -> str | None:
+        """The structural fingerprint a point lowered to, if recorded."""
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT fp FROM point_fps WHERE space=? AND key=?",
+                (space_fp, point_key_str(key))).fetchone()
+        return row[0] if row else None
+
+    def put_fps(self, space_fp: str, items):
+        """Write many (point key, fp) rows in one transaction."""
+        rows = [(space_fp, point_key_str(key), fp, time.time())
+                for key, fp in items]
+        if not rows:
+            return
+        with self._lock:
+            self._conn.executemany(
+                "INSERT OR REPLACE INTO point_fps VALUES (?,?,?,?)", rows)
+            self._conn.commit()
+
+    def struct_size(self, space_fp: str | None = None) -> int:
+        q = "SELECT COUNT(*) FROM structs"
+        args = ()
+        if space_fp is not None:
+            q += " WHERE space=?"
+            args = (space_fp,)
+        with self._lock:
+            return int(self._conn.execute(q, args).fetchone()[0])
 
     @staticmethod
     def _encode(key, counters):
@@ -140,11 +236,12 @@ class MeasureCache:
 
     def clear(self, space_fp: str | None = None):
         with self._lock:
-            if space_fp is None:
-                self._conn.execute("DELETE FROM measurements")
-            else:
-                self._conn.execute(
-                    "DELETE FROM measurements WHERE space=?", (space_fp,))
+            for table in ("measurements", "structs", "point_fps"):
+                if space_fp is None:
+                    self._conn.execute(f"DELETE FROM {table}")
+                else:
+                    self._conn.execute(
+                        f"DELETE FROM {table} WHERE space=?", (space_fp,))
             self._conn.commit()
 
     def close(self):

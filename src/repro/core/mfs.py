@@ -65,13 +65,24 @@ def construct_mfs(engine, space: SearchSpace, point: dict, kind: str,
     only the most-informative probes are measured (unmeasured values are
     conservatively left out of the triggering sets) — budget-exhausted
     constructions lose the least information.
+
+    ``fidelity="lowered"`` (ISSUE 5) strengthens both steps with the
+    fidelity-1 tier: probes are lowered (cheap, no compile) and any probe
+    whose **structural fingerprint** equals the witness's — identical
+    program AND identical counter inputs — provably carries the witness's
+    counters, so it short-circuits to triggering without charging budget
+    (the fp shortcut additionally requires an equal ``remat`` value, since
+    the A3 threshold reads it from the point).  Remaining probes are
+    ordered by *measured lowered-module* informativeness instead of the
+    fidelity-0 estimate.
     """
     from . import batching
 
     point = space.normalize(point)
     triggering = {f: {point[f]} for f in space.factors}
     probes = []                                  # (factor, value, probe point)
-    witness_run = space.to_run(point) if fidelity == "prescreen" else None
+    screen = fidelity in ("prescreen", "lowered")
+    witness_run = space.to_run(point) if screen else None
     for f, dom in space.factors.items():
         if len(dom) < 2:
             continue
@@ -89,12 +100,34 @@ def construct_mfs(engine, space: SearchSpace, point: dict, kind: str,
                 batching.note_prescreen(engine, 0, 1)
                 continue
             probes.append((f, v, q))
-    if fidelity == "prescreen" and len(probes) > 1:
+    preds = None
+    if fidelity == "lowered" and probes:
+        # lower all probes concurrently (also warms the fingerprint cache),
+        # then drop the structurally-identical ones: same fp ⇒ same counters
+        preds = batching.measure_lowered_batch(engine,
+                                               [q for _, _, q in probes])
+        wfp = batching.lowered_key(engine, point)
+        if wfp is not None:
+            kept, kept_preds = [], []
+            for (f, v, q), pr in zip(probes, preds):
+                if q.get("remat") == point.get("remat") \
+                        and batching.lowered_key(engine, q) == wfp:
+                    triggering[f].add(v)         # proven: identical counters
+                    batching.note_prescreen(engine, 0, 1)
+                else:
+                    kept.append((f, v, q))
+                    kept_preds.append(pr)
+            probes, preds = kept, kept_preds
+    if screen and len(probes) > 1:
         from .surrogate import KIND_COUNTER
         drv, drv_mode = KIND_COUNTER.get(kind, (None, "max"))
         if drv is not None:
-            preds = batching.predict_batch(engine, [q for _, _, q in probes])
-            ref = batching.predict_batch(engine, [point])[0]
+            if preds is None:
+                preds = batching.predict_batch(engine,
+                                               [q for _, _, q in probes])
+                ref = batching.predict_batch(engine, [point])[0]
+            else:
+                ref = batching.measure_lowered_batch(engine, [point])[0]
             ref_v = (ref or {}).get(drv)
 
             def info(i):

@@ -11,7 +11,11 @@ which is both cheaper to replay and directly readable as a repro recipe.
 
 Two passes, both driven through ``Engine.measure_batch`` at full fidelity
 (``prescreen=0`` — a screened-out minimization probe would silently accept
-an unverified reduction):
+an unverified reduction).  With ``fidelity="lowered"`` (ISSUE 5) each
+batch first consults the engine's fidelity-1 tier: candidates whose
+structural fingerprint equals the current witness's provably share its
+counters and are accepted without a measurement — the only probes that
+still compile are the ones that could actually change the verdict:
 
 * :func:`minimize_witness` — ddmin over the keep set.  Chunk/complement
   probes of one granularity are independent, so each round is a single
@@ -108,8 +112,8 @@ def _note_minimize(engine, n: int):
 
 
 def minimize_witness(engine, space: SearchSpace, witness: dict, kind: str,
-                     max_probes: int = 64, within: MFS | None = None
-                     ) -> MinimizeResult:
+                     max_probes: int = 64, within: MFS | None = None,
+                     fidelity: str = "full") -> MinimizeResult:
     """ddmin the witness's off-baseline factors down to a 1-minimal keep set.
 
     Every probe is a real full-fidelity measurement; a reduction is accepted
@@ -123,12 +127,24 @@ def minimize_witness(engine, space: SearchSpace, witness: dict, kind: str,
     ``within``: restrict the walk to points matching this MFS's conditions,
     so the minimized witness still exemplifies the catalog entry it came
     from (candidates outside are rejected without a measurement).
+
+    ``fidelity="lowered"`` (ISSUE 5) consults the fidelity-1 tier: every
+    probe batch is lowered first (cheap, uncharged), and a candidate whose
+    structural fingerprint equals the current witness's — with an equal
+    ``remat`` value, which the A3 threshold reads — is accepted as
+    triggering WITHOUT a measurement: identical fingerprints prove
+    identical counters.  The greedy 1-minimality pass additionally orders
+    its candidates by lowered-module closeness to the witness on the
+    kind's driving counter, so structurally-conservative reductions are
+    tried (and accepted) first.
     """
     witness = space.normalize(witness)
+    use_lowered = fidelity == "lowered"
     base = baseline_point(space, witness["arch"], witness["shape"])
     diffs = tuple(f for f in sorted(space.factors)
                   if f not in WORKLOAD_FACTORS and witness[f] != base[f])
     trace: list = []                       # (point, triggered) per probe
+    wfp = batching.lowered_key(engine, witness) if use_lowered else None
 
     def build(keep) -> dict | None:
         p = dict(base)
@@ -144,14 +160,33 @@ def minimize_witness(engine, space: SearchSpace, witness: dict, kind: str,
     def test_batch(keeps: list) -> list:
         """keep sets -> triggered flags (None: infeasible/untestable)."""
         pts, idx = [], []
+        out = [None] * len(keeps)
         for i, keep in enumerate(keeps):
             p = build(keep)
-            if p is not None:
-                idx.append(i)
-                pts.append(p)
-        out = [None] * len(keeps)
+            if p is None:
+                continue
+            idx.append(i)
+            pts.append(p)
         if not pts:
             return out
+        if wfp is not None:
+            # fp shortcut: lower the batch (no compiles), accept candidates
+            # that provably share the witness's counters without measuring.
+            # The witness point itself is never short-circuited — its own
+            # measurement is what establishes that the anomaly still fires.
+            batching.measure_lowered_batch(engine, pts)   # warm fp cache
+            m_idx, m_pts = [], []
+            for i, p in zip(idx, pts):
+                if p != witness \
+                        and p.get("remat") == witness.get("remat") \
+                        and batching.lowered_key(engine, p) == wfp:
+                    out[i] = True
+                else:
+                    m_idx.append(i)
+                    m_pts.append(p)
+            idx, pts = m_idx, m_pts
+            if not pts:
+                return out
         results = batching.measure_batch(engine, pts, prescreen=0)
         _note_minimize(engine, len(pts))
         for i, p, m in zip(idx, pts, results):
@@ -209,9 +244,32 @@ def minimize_witness(engine, space: SearchSpace, witness: dict, kind: str,
             break
 
     # final greedy pass: 1-minimality (and near-miss controls for replay)
+    def order_greedy(cands: list) -> list:
+        """Lowered fidelity: try structurally-closest reductions first
+        (smallest fidelity-1 delta on the kind's driving counter)."""
+        if not use_lowered or len(cands) < 2:
+            return cands
+        from .surrogate import KIND_COUNTER
+        drv, _ = KIND_COUNTER.get(kind, (None, None))
+        if drv is None:
+            return cands
+        pts = [build(c) for c in cands]
+        lows = batching.measure_lowered_batch(
+            engine, [p if p is not None else witness for p in pts])
+        ref = batching.measure_lowered_batch(engine, [witness])[0]
+        ref_v = (ref or {}).get(drv)
+
+        def delta(i):
+            v = (lows[i] or {}).get(drv) if pts[i] is not None else None
+            if v is None or ref_v is None:
+                return float("inf")
+            return abs(float(v) - float(ref_v))
+        return [cands[i] for i in
+                sorted(range(len(cands)), key=lambda i: (delta(i), i))]
+
     improved = True
     while improved and K and len(trace) < max_probes:
-        cands = [[g for g in K if g != f] for f in K]
+        cands = order_greedy([[g for g in K if g != f] for f in K])
         flags = test_batch(cands)
         improved = False
         for cand, flag in zip(cands, flags):
@@ -257,7 +315,8 @@ def boundary_controls(engine, space: SearchSpace, point: dict, kind: str,
 
 
 def tighten_conditions(engine, space: SearchSpace, mfs: MFS,
-                       max_probes: int = 32) -> MFS:
+                       max_probes: int = 32,
+                       fidelity: str = "full") -> MFS:
     """Upgrade single-factor MFS conditions with pairwise probes.
 
     For every pair of non-witness condition values (v of f, w of g), probe
@@ -267,6 +326,13 @@ def tighten_conditions(engine, space: SearchSpace, mfs: MFS,
     never dropped, so the tightened MFS still matches its own witness.
     Probes run as one full-fidelity batch, budget-capped at ``max_probes``
     (cheapest-first in sorted factor/value order).
+
+    ``fidelity="lowered"``: pair probes whose structural fingerprint (and
+    ``remat``) equal the witness's provably still trigger — the pair's
+    conjunctive claim is sound by construction — and skip measurement.
+    The fp filter runs BEFORE the budget cap (over a 4x-wider candidate
+    pool, bounding the lowering spend), so free resolutions never consume
+    measurement slots; the full-fidelity path is unchanged.
     """
     w = space.normalize(mfs.witness)
     conds = {f: list(vals) for f, vals in mfs.conditions.items()}
@@ -278,13 +344,26 @@ def tighten_conditions(engine, space: SearchSpace, mfs: MFS,
                 for u in sorted((x for x in conds[g] if x != w.get(g)),
                                 key=str):
                     pairs.append((f, v, g, u))
-    pairs = pairs[:max(int(max_probes), 0)]
+    cap = max(int(max_probes), 0)
+    pairs = pairs[:4 * cap] if fidelity == "lowered" else pairs[:cap]
     probes, idx = [], []
     for i, (f, v, g, u) in enumerate(pairs):
         q = space.normalize({**w, f: v, g: u})
         if space.valid(q) and q != w:
             probes.append(q)
             idx.append(i)
+    if fidelity == "lowered" and probes:
+        wfp = batching.lowered_key(engine, w)
+        if wfp is not None:
+            batching.measure_lowered_batch(engine, probes)  # warm fp cache
+            kept_p, kept_i = [], []
+            for q, i in zip(probes, idx):
+                if not (q.get("remat") == w.get("remat")
+                        and batching.lowered_key(engine, q) == wfp):
+                    kept_p.append(q)
+                    kept_i.append(i)
+            probes, idx = kept_p, kept_i      # fp-equal pairs: claim sound
+        probes, idx = probes[:cap], idx[:cap]  # cap MEASURED probes only
     results = batching.measure_batch(engine, probes, prescreen=0)
     if probes:
         _note_minimize(engine, len(probes))

@@ -8,7 +8,9 @@ results are independent of the engine's ``n_workers``.
 and lets the engine's fidelity-0 prescreen promote only the
 surrogate-most-anomalous ``pool`` candidates to a full compile — the same
 budget now fuzzes a much wider slice of the space.  ``fidelity="full"`` is
-the PR-1 baseline, byte-for-byte.
+the PR-1 baseline, byte-for-byte.  ``fidelity="lowered"`` (ISSUE 5)
+measures candidates in full but builds MFSes through the fidelity-1 tier
+(structural-fingerprint short-circuits + lowered-counter probe ordering).
 """
 from __future__ import annotations
 

@@ -30,6 +30,12 @@ thread on deterministic calibrator state, so prescreened trajectories remain
 identical for any ``n_workers``.  ``fidelity="full"`` (the default) takes
 the exact PR-1 code path, byte-for-byte — the paper-faithful ablations
 survive unchanged.
+
+``fidelity="lowered"`` (ISSUE 5) keeps proposal measurement at full
+fidelity but constructs MFSes through the fidelity-1 tier
+(``construct_mfs(..., fidelity="lowered")``): necessity probes that lower
+to the witness's structural fingerprint short-circuit without compiling or
+charging, and the rest are ordered by lowered-module informativeness.
 """
 from __future__ import annotations
 

@@ -57,6 +57,24 @@ _OPERAND_RE = re.compile(r"%([\w\.\-]+)")
 _GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 
+# --- the "bare" dialect: pre-XLA-optimization text (jax's
+# ``lowered.as_text(dialect="hlo")``, the fidelity-1 tier) names
+# instructions WITHOUT the % sigil and opens computations as ``name {``
+# with no signature.  Bare operand names must start with a letter or
+# underscore so inline literals (``constant(0)``) are not misread as
+# operands.  The compiled dialect keeps the original regexes, so compiled
+# analyses stay byte-identical (pinned by test_hloanalysis_parity).
+_CALLS_BARE_RE = re.compile(r"calls=([\w\.\-]+)")
+_COND_BARE_RE = re.compile(r"condition=([\w\.\-]+)")
+_BODY_BARE_RE = re.compile(r"body=([\w\.\-]+)")
+_TOAPPLY_BARE_RE = re.compile(r"to_apply=([\w\.\-]+)")
+_OPERAND_BARE_RE = re.compile(r"\b([A-Za-z_][\w\.\-]*)")
+_COMPILED_SIGIL_RE = re.compile(r"^\s+(?:ROOT\s+)?%", re.M)
+
+
+def _is_bare(text: str) -> bool:
+    return _COMPILED_SIGIL_RE.search(text) is None
+
 COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                   "collective-permute")
 # ring-model wire-bytes factor given group size P, as f(P) applied to operand
@@ -144,6 +162,8 @@ class Computation:
 
 _HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
 _INSTR_RE = re.compile(r"^\s+(ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_HDR_BARE_RE = re.compile(r"^(?:ENTRY\s+)?([\w\.\-]+)\s*\{\s*$")
+_INSTR_BARE_RE = re.compile(r"^\s+(ROOT\s+)?([\w\.\-]+)\s*=\s*(.*)$")
 
 
 def _split_type_op(rest: str):
@@ -187,7 +207,7 @@ def _res_bytes(ins: Instr) -> int:
     return b
 
 
-def _enrich(ins: Instr):
+def _enrich(ins: Instr, bare: bool = False):
     """Extract every attribute the analysis needs, exactly once."""
     attrs = ins.attrs
     op = ins.opcode
@@ -195,22 +215,24 @@ def _enrich(ins: Instr):
         m = _TRIP_RE.search(attrs)
         if m:
             ins.trip = int(m.group(1))
-        m = _BODY_RE.search(attrs)
+        m = (_BODY_BARE_RE if bare else _BODY_RE).search(attrs)
         if m:
             ins.body = m.group(1)
-        m = _COND_RE.search(attrs)
+        m = (_COND_BARE_RE if bare else _COND_RE).search(attrs)
         if m:
             ins.cond = m.group(1)
     elif op == "fusion":
-        m = _CALLS_RE.search(attrs)
+        m = (_CALLS_BARE_RE if bare else _CALLS_RE).search(attrs)
         if m:
             ins.calls = m.group(1)
     elif op == "conditional":
         m = _BRANCHES_RE.search(attrs)
         if m:
-            ins.branches = tuple(_OPERAND_RE.findall(m.group(1)))
+            ins.branches = tuple(
+                (_OPERAND_BARE_RE if bare else _OPERAND_RE).findall(
+                    m.group(1)))
     elif "to_apply=" in attrs:
-        m = _TOAPPLY_RE.search(attrs)
+        m = (_TOAPPLY_BARE_RE if bare else _TOAPPLY_RE).search(attrs)
         if m:
             ins.to_apply = m.group(1)
     if op == "dot":
@@ -242,13 +264,21 @@ def _index(comp: Computation):
             consumers.setdefault(o, []).append(ins)
 
 
-def parse_hlo(text: str) -> dict:
+def parse_hlo(text: str, bare: bool | None = None) -> dict:
+    """Parse HLO text.  ``bare=None`` auto-detects the dialect: compiled
+    modules name instructions ``%foo``; pre-XLA lowered modules (the
+    fidelity-1 tier) use bare names and signature-less headers."""
+    if bare is None:
+        bare = _is_bare(text)
+    hdr_re = _HDR_BARE_RE if bare else _HDR_RE
+    instr_re = _INSTR_BARE_RE if bare else _INSTR_RE
+    operand_re = _OPERAND_BARE_RE if bare else _OPERAND_RE
     comps: dict[str, Computation] = {}
     cur = None
     for line in text.splitlines():
         if cur is None:
-            m = _HDR_RE.match(line)
-            if m and "->" in line:
+            m = hdr_re.match(line)
+            if m and (bare or "->" in line):
                 cur = Computation(m.group(1), [])
                 if line.startswith("ENTRY"):
                     comps["__entry__"] = cur
@@ -258,7 +288,7 @@ def parse_hlo(text: str) -> dict:
             _index(cur)
             cur = None
             continue
-        m = _INSTR_RE.match(line)
+        m = instr_re.match(line)
         if not m:
             continue
         is_root = bool(m.group(1))
@@ -268,9 +298,9 @@ def parse_hlo(text: str) -> dict:
             type_str, opcode, operand_str, attrs = _split_type_op(rest)
         except ValueError:
             continue
-        operands = _OPERAND_RE.findall(operand_str)
+        operands = operand_re.findall(operand_str)
         cur.instrs.append(_enrich(Instr(name, type_str, opcode, operands,
-                                        attrs, is_root)))
+                                        attrs, is_root), bare))
     if cur is not None:              # unterminated trailing computation
         _index(cur)
     return comps

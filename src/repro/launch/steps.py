@@ -54,14 +54,29 @@ class Cell:
     donate_argnums: tuple
     rules: dict
     stats: FallbackStats
+    _lowered: Any = dataclasses.field(default=None, repr=False,
+                                      compare=False)
 
     def lower(self):
-        with self.mesh, use_rules(self.mesh, self.rules):
-            jitted = jax.jit(self.fn,
-                             in_shardings=self.in_shardings,
-                             out_shardings=self.out_shardings,
-                             donate_argnums=self.donate_argnums)
-            return jitted.lower(*self.arg_shapes)
+        """Trace + lower on the production mesh (memoized per cell —
+        tracing is Python-bound and repeat callers shouldn't pay it twice;
+        the split-phase compile releases the memo once the module is
+        compiled, see ``counters.compile_lowered``)."""
+        if self._lowered is None:
+            with self.mesh, use_rules(self.mesh, self.rules):
+                jitted = jax.jit(self.fn,
+                                 in_shardings=self.in_shardings,
+                                 out_shardings=self.out_shardings,
+                                 donate_argnums=self.donate_argnums)
+                self._lowered = jitted.lower(*self.arg_shapes)
+        return self._lowered
+
+    def release_lowered(self):
+        """Drop the memoized lowered module.  Measurements retain their
+        Cell (engine ``measure_full`` store), and a traced MLIR module is
+        megabytes — holding it past compilation would grow resident memory
+        with every retained Measurement."""
+        self._lowered = None
 
 
 def build_cell(cfg: ModelConfig, shape: ShapeSpec, policy: RunPolicy,

@@ -43,22 +43,44 @@ class _StubMeasurement:
     diag = {"collective_blowup": 1.0}
 
 
+class _FakeLowered:
+    """Stub LoweredCell: the fingerprint keys the realized cell, mirroring
+    the real invariant (same cell -> same program -> same fingerprint)."""
+
+    def __init__(self, cell):
+        self.cell = cell
+        self.fingerprint = "fp:" + repr(cell)
+
+
 def _stub_compiles(monkeypatch, fail_on=()):
-    """Replace the compile layer with an instant deterministic stub."""
+    """Replace the split-phase compile layer with instant deterministic
+    stubs (lower_cell -> fingerprint, compile_lowered -> Measurement)."""
     calls = []
 
     def fake_build_cell(cfg, shape, policy, mesh, opt):
-        return (cfg.name, shape.name, policy)
+        return (cfg.name, shape.name, str(policy))
 
-    def fake_measure_cell(cell):
-        calls.append(cell)
-        if cell[1] in fail_on:
+    def fake_lower_cell(cell, chip=None):
+        return _FakeLowered(cell)
+
+    def fake_compile_lowered(lc, chip=None):
+        calls.append(lc.cell)
+        if lc.cell[1] in fail_on:
             raise RuntimeError("planted compile failure")
         return _StubMeasurement()
 
+    def fake_lowered_counters(lc, chip=None):
+        return {"perf.roofline_efficiency": 0.5,
+                "perf.useful_flops_ratio": 0.4,
+                "diag.transpose_bytes": 1e6}
+
     monkeypatch.setattr(engine_mod, "build_cell", fake_build_cell)
-    monkeypatch.setattr(engine_mod.counters_mod, "measure_cell",
-                        fake_measure_cell)
+    monkeypatch.setattr(engine_mod.counters_mod, "lower_cell",
+                        fake_lower_cell)
+    monkeypatch.setattr(engine_mod.counters_mod, "compile_lowered",
+                        fake_compile_lowered)
+    monkeypatch.setattr(engine_mod.counters_mod, "lowered_counters",
+                        fake_lowered_counters)
     return calls
 
 

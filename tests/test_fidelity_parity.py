@@ -49,22 +49,41 @@ class _StubMeasurement:
                      "hbm_oversubscribed": 0.4}
 
 
+class _FakeLowered:
+    def __init__(self, cell):
+        self.cell = cell
+        self.fingerprint = "fp:" + repr(cell)
+
+
 def _stub_compiles(monkeypatch, fail_on=()):
-    """Deterministic point-dependent fake compile layer."""
+    """Deterministic point-dependent fake split-phase compile layer."""
     calls = []
 
     def fake_build_cell(cfg, shape, policy, mesh, opt):
         return (cfg.name, shape.name, str(policy))
 
-    def fake_measure_cell(cell):
-        calls.append(cell)
-        if cell[1] in fail_on:
+    def fake_lower_cell(cell, chip=None):
+        return _FakeLowered(cell)
+
+    def fake_compile_lowered(lc, chip=None):
+        calls.append(lc.cell)
+        if lc.cell[1] in fail_on:
             raise RuntimeError("planted compile failure")
-        return _StubMeasurement(sum(map(ord, "".join(map(str, cell)))))
+        return _StubMeasurement(sum(map(ord, "".join(map(str, lc.cell)))))
+
+    def fake_lowered_counters(lc, chip=None):
+        h = sum(map(ord, "".join(map(str, lc.cell))))
+        return {"perf.roofline_efficiency": 0.1 + (h % 11) * 0.05,
+                "perf.useful_flops_ratio": 0.2 + (h % 7) * 0.05,
+                "diag.transpose_bytes": float(h % 13) * 1e5}
 
     monkeypatch.setattr(engine_mod, "build_cell", fake_build_cell)
-    monkeypatch.setattr(engine_mod.counters_mod, "measure_cell",
-                        fake_measure_cell)
+    monkeypatch.setattr(engine_mod.counters_mod, "lower_cell",
+                        fake_lower_cell)
+    monkeypatch.setattr(engine_mod.counters_mod, "compile_lowered",
+                        fake_compile_lowered)
+    monkeypatch.setattr(engine_mod.counters_mod, "lowered_counters",
+                        fake_lowered_counters)
     return calls
 
 
@@ -77,9 +96,10 @@ def _sa_fingerprint(r):
             r.n_attempts)
 
 
-def _run_sa(space, fidelity, n_workers, surrogate=None):
+def _run_sa(space, fidelity, n_workers, surrogate=None, struct_dedup=None):
     eng = Engine(space, {"single": object()}, n_workers=n_workers,
-                 persistent_cache=False, surrogate=surrogate)
+                 persistent_cache=False, surrogate=surrogate,
+                 struct_dedup=struct_dedup)
     r = simulated_annealing(eng, space, "diag.collective_blowup", "max",
                             seed=5, budget_compiles=30, fidelity=fidelity)
     eng.close()
@@ -96,6 +116,18 @@ def test_full_fidelity_unaffected_by_surrogate(monkeypatch):
     assert _run_sa(space, "full", 4) == base
     assert _run_sa(space, "full", 1, surrogate=False) == base
     assert _run_sa(space, "full", 4, surrogate=False) == base
+
+
+def test_full_fidelity_unaffected_by_struct_dedup(monkeypatch):
+    """ISSUE 5 acceptance: fidelity="full" trajectories are byte-identical
+    with structural dedup on and off, at any n_workers — dedup only changes
+    n_compiles/compile_time, never results or charging."""
+    _stub_compiles(monkeypatch)
+    space = small_space()
+    base = _run_sa(space, "full", 1, struct_dedup=False)
+    assert _run_sa(space, "full", 1, struct_dedup=True) == base
+    assert _run_sa(space, "full", 4, struct_dedup=True) == base
+    assert _run_sa(space, "full", 4, struct_dedup=False) == base
 
 
 def test_engine_default_prescreen_never_leaks_into_drivers(monkeypatch):

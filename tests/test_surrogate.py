@@ -154,6 +154,36 @@ def test_predictions_deterministic_and_complete():
         assert c in a and math.isfinite(float(a[c])), c
 
 
+def test_predict_batch_bit_identical_to_scalar():
+    """ISSUE 5 satellite: the numpy-vectorized batch estimate is pinned
+    BIT-identical (==, not allclose) to the scalar path on the committed
+    fixture, including infeasible points and duplicate keys."""
+    space, _, pairs = load_fixture()
+    import random
+    rng = random.Random(0)
+    mesh_shapes = {"single": {"data": 4, "model": 4},
+                   "multi": {"pod": 2, "data": 4, "model": 4}}
+    pts = [p for p, _ in pairs]
+    pts += [space.random_point(rng) for _ in range(100)]
+    pts.append(dict(pts[0]))                       # duplicate key
+    bad = dict(pts[1])
+    bad["mesh"] = "nonexistent"
+    pts.insert(5, bad)                             # infeasible row
+    scalar = Surrogate(space, mesh_shapes)
+    vector = Surrogate(space, mesh_shapes)
+    want = [scalar.predict(p, calibrated=False) for p in pts]
+    got = vector.predict_batch(pts, calibrated=False)
+    assert want == got
+    # calibrated outputs route through the same calibrator.apply
+    for p, m in pairs[:40]:
+        scalar.observe(p, m)
+        vector.observe(p, m)
+    assert [scalar.predict(p) for p in pts[:50]] \
+        == vector.predict_batch(pts[:50])
+    # the batch path populates the same raw cache the scalar path reads
+    assert vector.predict(pts[0], calibrated=False) == want[0]
+
+
 def test_kind_counter_map_covers_anomaly_kinds():
     from repro.core import anomaly
     assert set(KIND_COUNTER) == {"A1", "A2", "A3", "A4"}
